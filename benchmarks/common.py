@@ -1,0 +1,21 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    """The harness CSV contract: name,us_per_call,derived."""
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def save_json(name: str, payload) -> pathlib.Path:
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path

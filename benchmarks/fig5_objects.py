@@ -1,0 +1,90 @@
+"""Fig 5 / Table 1: the data-object census.
+
+(1) HPC side: catalog every workload's objects and confirm the paper's
+finding — a handful of large objects dominate peak memory.
+(2) LM side (this framework's workload): trace a reduced train step with
+ObjectCatalog.from_step_fn and census params / optimizer moments /
+activations the same way; then show the full-scale placement decision for
+each assigned architecture (via abstract shapes — no allocation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.core.objects import ObjectCatalog, ObjectKind
+from repro.core.placement import PlacementPolicy
+from repro.core.tiering import TieringConfig, plan_for_params
+from repro.hpc import WORKLOADS
+from repro.models import get_model, make_batch
+
+from benchmarks.common import emit, save_json
+
+
+def hpc_census() -> dict:
+    from repro.core.dual_buffer import DolmaRuntime
+
+    out = {}
+    for name, cls in WORKLOADS.items():
+        rt = DolmaRuntime(local_fraction=1.0)
+        w = cls(scale=0.3, seed=1)
+        w.register(rt)
+        catalog = ObjectCatalog(lo.obj for lo in rt._live.values())
+        out[name] = catalog.census()
+        emit(f"fig5/hpc_{name}", 0.0,
+             f"n={out[name]['n_objects']} large_frac="
+             f"{out[name]['large_fraction_of_peak']:.4f}")
+    return out
+
+
+def lm_census() -> dict:
+    cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, jax.random.PRNGKey(1), 2, 32)
+    catalog = ObjectCatalog.from_step_fn(
+        lambda p, b: model.loss_fn(p, b, cfg)[0],
+        params, batch,
+        kinds=[ObjectKind.PARAM, ObjectKind.INPUT],
+        donate_argnums=(0,),
+    )
+    census = catalog.census()
+    emit("fig5/lm_step", 0.0,
+         f"n={census['n_objects']} large_frac={census['large_fraction_of_peak']:.4f}")
+    return census
+
+
+def placement_at_scale() -> dict:
+    """Full-config DOLMA placement per assigned arch (abstract, no alloc)."""
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        model = get_model(cfg)
+        params_abs = jax.eval_shape(
+            functools.partial(model.init_params, cfg=cfg), jax.random.key(0)
+        )
+        plan = plan_for_params(
+            params_abs, config=TieringConfig(local_fraction=0.3),
+            opt_state={"m": params_abs, "v": params_abs},
+        )
+        out[arch] = plan.summary()
+        emit(f"fig5/placement_{arch}", 0.0,
+             f"saving={plan.memory_saving:.2f} n_remote={len(plan.remote_names())}")
+    return out
+
+
+def run() -> dict:
+    payload = {
+        "hpc": hpc_census(),
+        "lm_reduced_step": lm_census(),
+        "lm_placement_full_scale": placement_at_scale(),
+    }
+    save_json("fig5_objects", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig 9: dual-buffer ablation (single thread).
+
+Each NPB workload runs at its minimal comparable local fraction with the
+dual-buffer prefetch ON vs OFF. The paper finds large wins for read-heavy
+CG and moderate wins for mixed read/write MG/FT/LU.
+"""
+from __future__ import annotations
+
+from repro.core.dual_buffer import DolmaRuntime
+from repro.core.fabric import INFINIBAND_100G
+from repro.hpc import WORKLOADS, run_workload
+
+from benchmarks.common import emit, save_json
+
+NPB = ["CG", "MG", "FT", "BT", "LU", "IS"]
+FRACTION = 0.5
+SCALE = 0.3
+SIM_SCALE = 1000.0 / SCALE
+N_ITERS = 5
+
+
+def run() -> dict:
+    rows = {}
+    for name in NPB:
+        cls = WORKLOADS[name]
+        res = {}
+        for dual in (True, False):
+            from repro.core.placement import PlacementPolicy
+            rt = DolmaRuntime(local_fraction=FRACTION, fabric=INFINIBAND_100G,
+                              dual_buffer=dual, sim_scale=SIM_SCALE,
+                              policy=PlacementPolicy(all_large_remote=True))
+            r = run_workload(cls(scale=SCALE, seed=1), rt, N_ITERS)
+            res["dual" if dual else "nodual"] = r.elapsed_us
+        res["speedup"] = res["nodual"] / max(res["dual"], 1e-9)
+        rows[name] = res
+        emit(f"fig9/{name}_dual", res["dual"],
+             f"nodual={res['nodual']:.0f}us speedup={res['speedup']:.2f}x")
+    save_json("fig9_dualbuffer", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,122 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run records.
+
+  compute term    = HLO_FLOPs_per_device / peak_bf16_flops_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+  collective term = collective_wire_bytes_per_device / ICI_link_bandwidth
+                    (DCN-crossing collectives — group size spanning pods —
+                    are charged at the 25 GB/s DCN rate instead)
+
+FLOPs/bytes come from the loop-corrected HLO analysis (repro.launch.
+hlo_analysis), NOT xla's cost_analysis (which counts while bodies once).
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), N = active
+params — the useful-fraction column catches remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9 * 4          # ~50 GB/s/link, 4 links usable per v5e chip
+DCN_BW = 25e9              # per-chip share of the pod-to-pod fabric
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+CELL_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,      # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec.get("active_param_count") or rec.get("param_count", 0)
+    cell = rec["cell"]
+    tokens = CELL_TOKENS.get(cell, 0)
+    mult = 6 if rec.get("kind") == "train" else 2
+    return mult * n * tokens
+
+
+def chips(rec: dict) -> int:
+    return 512 if rec["mesh"] == "2x16x16" else 256
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if "error" in rec or "skipped" in rec or "analysis" not in rec:
+        return None
+    a = rec["analysis"]
+    compute_s = a["flops"] / PEAK_FLOPS
+    # memory: [bytes_min, bytes] bracket TPU-fusion vs CPU-fusion granularity;
+    # the roofline uses the lower bound (TPU-realistic), both are reported
+    memory_s = a.get("bytes_min", a["bytes"]) / HBM_BW
+    memory_upper_s = a["bytes"] / HBM_BW
+    # split collectives into ICI vs DCN by group size (pod axis groups = 2)
+    ici_bytes = 0.0
+    dcn_bytes = 0.0
+    for key, b in rec.get("collectives_by_group", {}).items():
+        gsize = int(key.split("@g")[1])
+        if rec["mesh"] == "2x16x16" and gsize in (2, 32, 512):
+            dcn_bytes += b
+        else:
+            ici_bytes += b
+    wire_scale = (
+        a["collective_wire_bytes"] / a["collective_bytes"]
+        if a["collective_bytes"] else 1.0
+    )
+    collective_s = (ici_bytes * wire_scale) / ICI_BW + (
+        dcn_bytes * wire_scale
+    ) / DCN_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec) / chips(rec)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "cell": rec["cell"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "memory_upper_s": round(memory_upper_s, 6),
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_dev": mf,
+        "useful_fraction": round(mf / a["flops"], 4) if a["flops"] else 0.0,
+        "roofline_fraction": round(
+            (mf / PEAK_FLOPS) / bound, 4
+        ) if bound else 0.0,
+        "hbm_peak_gb": round(
+            rec.get("memory", {}).get("peak_bytes_est", 0) / 1e9, 2
+        ),
+    }
+
+
+def run(pattern: str = "*.json") -> list[dict]:
+    rows = []
+    for path in sorted(DRYRUN_DIR.glob(pattern)):
+        rec = json.loads(path.read_text())
+        row = roofline_row(rec)
+        if row is None:
+            status = "SKIP" if "skipped" in rec else "ERROR"
+            rows.append({"arch": rec.get("arch"), "cell": rec.get("cell"),
+                         "mesh": rec.get("mesh"), "status": status})
+            continue
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    hdr = (f"{'arch':22s} {'cell':12s} {'mesh':8s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'domin':>6s} {'useful':>7s} {'roofl%':>7s} {'HBM_GB':>7s}")
+    print(hdr)
+    for r in rows:
+        if "status" in r:
+            print(f"{r['arch']:22s} {r['cell']:12s} {r['mesh']:8s} {r['status']}")
+            continue
+        print(f"{r['arch']:22s} {r['cell']:12s} {r['mesh']:8s} "
+              f"{r['compute_s']:9.5f} {r['memory_s']:9.5f} {r['collective_s']:9.5f} "
+              f"{r['dominant']:>6s} {r['useful_fraction']:7.3f} "
+              f"{100*r['roofline_fraction']:6.1f}% {r['hbm_peak_gb']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

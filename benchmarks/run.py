@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per measured quantity)
+and writes structured JSON under benchmarks/results/.
+
+  fig4  — remote-vs-local microbenchmark (latency model, calibrated)
+  fig5  — data-object census + full-scale LM placement decisions
+  fig7  — 8 workloads x local-memory fractions (headline <=16%/63% claim)
+  fig8  — multi-thread scaling, DOLMA vs Oracle
+  fig9  — dual-buffer ablation
+  fig10 — CG problem-size scaling (DOLMA vs Oracle vs sync RDMA)
+  roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig4_microbench,
+        fig5_objects,
+        fig7_workloads,
+        fig8_threads,
+        fig9_dualbuffer,
+        fig10_problem_sizes,
+    )
+
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig4", fig4_microbench),
+        ("fig5", fig5_objects),
+        ("fig7", fig7_workloads),
+        ("fig8", fig8_threads),
+        ("fig9", fig9_dualbuffer),
+        ("fig10", fig10_problem_sizes),
+    ]
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"bench/{name},{(time.time()-t0)*1e6:.0f},ok", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"bench/{name},0,FAILED", flush=True)
+
+    # roofline table (from dry-run artifacts, if present)
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.run()
+        done = [r for r in rows if "status" not in r]
+        print(f"bench/roofline,0,cells={len(done)}/{len(rows)}", flush=True)
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        failures += 1
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Reproduce the paper's Fig 7 for any workload on the command line.
+
+Run:  PYTHONPATH=src python examples/hpc_fig7_sweep.py --workload MG
+"""
+import argparse
+
+from repro.core import DolmaRuntime, ETHERNET_25G, INFINIBAND_100G
+from repro.core.placement import PlacementPolicy
+from repro.hpc import WORKLOADS, run_workload
+
+SCALE = 0.2
+SIM = 1000.0 / SCALE
+FRACTIONS = [0.01, 0.05, 0.2, 0.5, 0.7, 1.0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="CG", choices=list(WORKLOADS))
+    ap.add_argument("--fabric", default="ib", choices=["ib", "eth"])
+    ap.add_argument("--no-dual-buffer", action="store_true")
+    args = ap.parse_args()
+
+    fabric = INFINIBAND_100G if args.fabric == "ib" else ETHERNET_25G
+    cls = WORKLOADS[args.workload]
+    oracle = run_workload(cls(scale=SCALE, seed=1),
+                          DolmaRuntime(local_fraction=1.0, sim_scale=SIM), 5)
+    print(f"{args.workload} on {fabric.name} "
+          f"(dual buffer {'off' if args.no_dual_buffer else 'on'})")
+    print(f"{'budget':>8s} {'time':>10s} {'slowdown':>9s} {'capacity':>10s}")
+    print(f"{'oracle':>8s} {oracle.elapsed_us/1e6:9.3f}s {1.0:9.2f} "
+          f"{'(all local)':>10s}")
+    for frac in FRACTIONS:
+        rt = DolmaRuntime(
+            local_fraction=frac, fabric=fabric,
+            dual_buffer=not args.no_dual_buffer, sim_scale=SIM,
+            policy=PlacementPolicy(all_large_remote=frac < 1.0),
+        )
+        r = run_workload(cls(scale=SCALE, seed=1), rt, 5)
+        assert abs(r.checksum - oracle.checksum) <= 1e-6 * abs(oracle.checksum)
+        print(f"{frac:8.0%} {r.elapsed_us/1e6:9.3f}s "
+              f"{r.elapsed_us/oracle.elapsed_us:9.2f} "
+              f"{rt.local_capacity_bytes()/1e9:9.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

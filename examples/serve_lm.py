@@ -1,0 +1,48 @@
+"""Serve a small LM with batched requests through the DOLMA-aware engine.
+
+The engine catalogs params + KV cache as data objects and runs the placement
+policy against an HBM budget; batched greedy decoding then runs through the
+compiled decode step.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import get_model
+from repro.serving import EngineConfig, ServingEngine
+
+
+def main() -> None:
+    cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32,
+                         n_layers=4, d_model=128, d_ff=256, vocab_size=1024)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    engine = ServingEngine(
+        cfg, params, EngineConfig(max_batch=4, max_len=128)
+    )
+    print("placement:", engine.stats()["placement"])
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new=16)
+    dt = time.perf_counter() - t0
+    toks = out.size
+    print(f"generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s batched)")
+    for i, row in enumerate(out):
+        print(f"  request {i}: {row.tolist()}")
+
+    # constrained-HBM variant: the policy demotes cache/params objects
+    tight = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, max_len=128, hbm_budget_bytes=1 << 20))
+    print("tight-budget placement:", tight.stats()["placement"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Asynchronous checkpoint/restart with metadata-table consistency (§4.2).
+
+Mirrors DOLMA's reliability design:
+  * checkpoints are taken asynchronously — the step loop hands off a host
+    snapshot and keeps training while a writer thread persists it;
+  * the DOLMA metadata (placement plan, sharding rules, mesh shape, data
+    step) is saved *with* the arrays, so recovery restores both the values
+    and the object->tier mapping;
+  * only objects dirty since the last checkpoint are rewritten (delta
+    checkpointing via per-leaf content hashes);
+  * restore is elastic: arrays are saved unsharded-logical, so a restart may
+    use a different mesh shape — the restore path reshards onto the new mesh
+    (node-failure recovery with a smaller/larger cluster).
+
+Atomicity: writes go to ``<dir>/tmp.<step>`` then rename to ``step_<n>``;
+a crash mid-write never corrupts the latest complete checkpoint.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        out[prefix + jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_like(template: Any, flat: dict[str, np.ndarray], prefix: str):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(template):
+        key = prefix + jax.tree_util.keystr(path)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"checkpoint leaf {key}: {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves
+    )
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | pathlib.Path, *, keep: int = 3,
+                 delta: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.delta = delta
+        self._writer: threading.Thread | None = None
+        self._hashes: dict[str, str] = {}
+        self._lock = threading.Lock()
+        self.write_log: list[dict] = []
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, params: Any, opt_state: Any, *,
+             metadata: dict | None = None, blocking: bool = False) -> None:
+        """Snapshot to host, then persist asynchronously."""
+        snap = {
+            "params": _flatten(jax.device_get(params), "params"),
+            "opt": _flatten(jax.device_get(opt_state), "opt"),
+        }
+        meta = dict(metadata or {})
+        meta["step"] = step
+        meta["time"] = time.time()
+        self.wait()  # one writer at a time; snapshot already taken
+        self._writer = threading.Thread(
+            target=self._write, args=(step, snap, meta), daemon=True
+        )
+        self._writer.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, snap: dict, meta: dict) -> None:
+        t0 = time.time()
+        tmp = self.dir / f"tmp.{step}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        written = 0
+        skipped = 0
+        prev = self.latest_dir(exclude=final)
+        manifest = {}
+        for group, flat in snap.items():
+            for key, arr in flat.items():
+                h = hashlib.sha1(arr.tobytes()).hexdigest()[:16]
+                fname = hashlib.sha1(key.encode()).hexdigest()[:24] + ".npy"
+                manifest[key] = {"file": fname, "hash": h}
+                if (
+                    self.delta
+                    and prev is not None
+                    and self._hashes.get(key) == h
+                    and (prev / fname).exists()
+                ):
+                    # unchanged since last checkpoint: hard-link the old blob
+                    (tmp / fname).hardlink_to(prev / fname)
+                    skipped += 1
+                else:
+                    np.save(tmp / fname, arr)
+                    written += 1
+                self._hashes[key] = h
+        meta["manifest"] = manifest
+        (tmp / "meta.json").write_text(json.dumps(meta, default=str))
+        tmp.rename(final)
+        with self._lock:
+            self.write_log.append(
+                {"step": step, "written": written, "delta_skipped": skipped,
+                 "seconds": round(time.time() - t0, 3)}
+            )
+        self._gc()
+
+    def wait(self) -> None:
+        if self._writer is not None and self._writer.is_alive():
+            self._writer.join()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        for old in ckpts[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def latest_dir(self, exclude: pathlib.Path | None = None):
+        ckpts = sorted(d for d in self.dir.glob("step_*") if d != exclude)
+        return ckpts[-1] if ckpts else None
+
+    def latest_step(self) -> int | None:
+        d = self.latest_dir()
+        return int(d.name.split("_")[1]) if d else None
+
+    def restore(self, params_template: Any, opt_template: Any,
+                *, shardings: tuple | None = None):
+        """Load latest checkpoint; reshard onto ``shardings`` (elastic)."""
+        d = self.latest_dir()
+        if d is None:
+            return None
+        meta = json.loads((d / "meta.json").read_text())
+        flat = {
+            key: np.load(d / entry["file"])
+            for key, entry in meta["manifest"].items()
+        }
+        params = _unflatten_like(params_template, flat, "params")
+        opt = _unflatten_like(opt_template, flat, "opt")
+        if shardings is not None:
+            p_sh, o_sh = shardings
+            params = jax.tree.map(jax.device_put, params, p_sh)
+            opt = jax.tree.map(jax.device_put, opt, o_sh)
+        return {"step": meta["step"], "params": params, "opt_state": opt,
+                "metadata": meta}

@@ -1,0 +1,17 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+
+Llama-arch code model [arXiv:2405.04324; hf]. GQA with a single KV head
+(multi-query attention).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+)

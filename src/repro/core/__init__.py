@@ -1,0 +1,52 @@
+"""DOLMA core: data-object-level memory tiering."""
+from repro.core.dual_buffer import DolmaRuntime, run_iterative
+from repro.core.fabric import (
+    ETHERNET_25G,
+    FabricModel,
+    FabricResource,
+    INFINIBAND_100G,
+    LOCAL_DDR,
+    SimClock,
+)
+from repro.core.metadata import MetadataTable, ObjectMeta, Status, Tier
+from repro.core.objects import DataObject, ObjectCatalog, ObjectKind, SMALL_OBJECT_BYTES
+from repro.core.placement import PlacementPlan, PlacementPolicy, demotion_order
+from repro.core.remote_store import RemoteStore
+from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
+from repro.core.tiering import (
+    TieringConfig,
+    leaf_sharding,
+    plan_for_params,
+    prefetch_scan,
+    supports_host_offload,
+)
+
+__all__ = [
+    "DataObject",
+    "DolmaRuntime",
+    "ETHERNET_25G",
+    "FabricModel",
+    "FabricResource",
+    "INFINIBAND_100G",
+    "LOCAL_DDR",
+    "MetadataTable",
+    "ObjectCatalog",
+    "ObjectKind",
+    "ObjectMeta",
+    "PlacementPlan",
+    "PlacementPolicy",
+    "RemoteStore",
+    "SMALL_OBJECT_BYTES",
+    "SimClock",
+    "Status",
+    "ThreadBuffers",
+    "Tier",
+    "TieringConfig",
+    "TwoLevelScheduler",
+    "demotion_order",
+    "leaf_sharding",
+    "plan_for_params",
+    "prefetch_scan",
+    "run_iterative",
+    "supports_host_offload",
+]

@@ -1,0 +1,355 @@
+"""DOLMA host runtime: tiered allocation + dual-buffer prefetch (§4.2, §5).
+
+:class:`DolmaRuntime` is what the HPC workloads (``repro.hpc``) run on. It
+implements, functionally and on the simulated clock:
+
+  * allocation interception (``alloc``) and the three-region local layout
+    (local data-object region / remote data-object cache region / metadata);
+  * placement via :class:`~repro.core.placement.PlacementPolicy`;
+  * on-demand chunked fetch bounded by the cache region size — small local
+    budgets force many small RDMA ops, reproducing the paper's observation
+    that 1–5 % budgets stay slow (§6.1.1);
+  * cross-iteration dual-buffer prefetch: at the end of step *i* the read set
+    is prefetched for step *i+1*, overlapping the fabric time with compute;
+    the access barrier is deferred to first use (§5);
+  * asynchronous write-back on demotion, synchronous reads (§4.2);
+  * a compute cost model (max of FLOP time and local-memory time) so
+    benchmark timings are deterministic on any host.
+
+Every fetch/commit also really moves the bytes (numpy), so workload results
+stay bit-correct and testable against untiered oracles.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.fabric import (
+    FabricModel,
+    INFINIBAND_100G,
+    LOCAL_DDR,
+    SimClock,
+)
+from repro.core.metadata import MetadataTable, ObjectMeta, Status, Tier
+from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
+from repro.core.placement import PlacementPlan, PlacementPolicy
+from repro.core.remote_store import RemoteStore
+
+# A 2-socket Xeon class node (the paper's testbed) for the compute model.
+DEFAULT_COMPUTE_GFLOPS = 60.0
+
+
+
+@dataclasses.dataclass
+class _LiveObject:
+    obj: DataObject
+    data: np.ndarray | None  # present iff LOCAL tier (remote data lives in store)
+
+
+class DolmaRuntime:
+    """Single-node DOLMA runtime (one compute timeline)."""
+
+    def __init__(
+        self,
+        *,
+        local_fraction: float = 1.0,
+        fabric: FabricModel = INFINIBAND_100G,
+        dual_buffer: bool = True,
+        sync_writes: bool = False,
+        clock: SimClock | None = None,
+        compute_gflops: float = DEFAULT_COMPUTE_GFLOPS,
+        local_mem: FabricModel = LOCAL_DDR,
+        policy: PlacementPolicy | None = None,
+        timeline: str = "main",
+        sim_scale: float = 1.0,
+    ) -> None:
+        # sim_scale: fabric/compute costs are charged at sim_scale x the real
+        # array bytes, so small (fast, testable) arrays model paper-scale
+        # objects with no distortion of base-latency/window ratios.
+        self.local_fraction = local_fraction
+        self.fabric = fabric
+        self.dual_buffer = dual_buffer
+        self.sync_writes = sync_writes
+        self.clock = clock or SimClock()
+        self.compute_gflops = compute_gflops
+        self.local_mem = local_mem
+        self.policy = policy or PlacementPolicy()
+        self.timeline = timeline
+        self.sim_scale = sim_scale
+
+        self.store = RemoteStore(clock=self.clock, fabric=fabric)
+        self.metadata = MetadataTable()
+        self._live: dict[str, _LiveObject] = {}
+        self._finalized = False
+        self._epoch = 0
+        self._read_set: set[str] = set()
+        self._prefetched: dict[str, float] = {}  # name -> sim completion time
+        self.cache_region_bytes = 0
+        self.local_region_bytes = 0
+        self.metadata_region_bytes = 4096
+        self._fetches_done_at = 0.0
+        self._peak_cached = 0
+        self._cached_now = 0
+        self._resident: dict[str, int] = {}   # bytes of each remote object
+        self._cache_share: dict[str, int] = {}  # resident in the cache region
+        self.plan: PlacementPlan | None = None
+
+    # -- allocation interception ------------------------------------------
+    def alloc(
+        self,
+        name: str,
+        array: np.ndarray,
+        *,
+        reads_per_iter: int = 1,
+        writes_per_iter: int = 0,
+        kind: ObjectKind = ObjectKind.INPUT,
+        lifetime_iters: float = float("inf"),
+        pinned_local: bool = False,
+    ) -> str:
+        if self._finalized:
+            raise RuntimeError("alloc() after finalize(); DOLMA plans at startup")
+        array = np.asarray(array)
+        obj = DataObject(
+            name=name,
+            shape=tuple(array.shape),
+            dtype=array.dtype,
+            sim_bytes=int(array.nbytes * self.sim_scale),
+            kind=kind,
+            n_reads=reads_per_iter,
+            n_writes=writes_per_iter,
+            lifetime_iters=lifetime_iters,
+            pinned_local=pinned_local,
+        )
+        self._live[name] = _LiveObject(obj, np.array(array, copy=True))
+        return name
+
+    def finalize(self) -> PlacementPlan:
+        """Run placement, demote REMOTE objects, size the cache region."""
+        catalog = ObjectCatalog(lo.obj for lo in self._live.values())
+        plan = self.policy.plan(catalog, local_fraction=self.local_fraction)
+        budget = plan.budget_bytes
+
+        local_bytes = 0
+        for name, lo in self._live.items():
+            tier = plan.tier_of(name)
+            if tier is Tier.REMOTE:
+                self.store.alloc(name, lo.data)
+                lo.data = None  # freed from local memory
+                self.metadata.register(
+                    ObjectMeta(
+                        name=name,
+                        tier=Tier.REMOTE,
+                        status=Status.FLUSHED,
+                        size_bytes=lo.obj.size_bytes,
+                    )
+                )
+            else:
+                local_bytes += lo.obj.size_bytes
+                self.metadata.register(
+                    ObjectMeta(
+                        name=name,
+                        tier=Tier.LOCAL,
+                        status=Status.PRESENT,
+                        size_bytes=lo.obj.size_bytes,
+                    )
+                )
+        self.local_region_bytes = local_bytes
+        # Remaining budget is the RDMA-registered cache region (§4.2); always
+        # keep at least one page so chunked transfer can make progress. The
+        # metadata region holds QPs/CQs + one entry per object (tiny, §3.2).
+        self.metadata_region_bytes = max(4096, 64 * len(catalog))
+        self.cache_region_bytes = max(
+            budget - local_bytes - self.metadata_region_bytes, 4096
+        )
+        # Statically partition the cache region among remote objects
+        # (proportional to size): the resident portion persists across
+        # iterations and only the remainder is refetched (§4.2 "prefetches the
+        # largest possible portion of the data object that fits").
+        remote = [(n, self.metadata.get(n).size_bytes) for n in plan.remote_names()]
+        total_remote = sum(s for _n, s in remote) or 1
+        usable = self.cache_region_bytes
+        if self.dual_buffer:
+            usable //= 2  # one half streams, one half is resident
+        for n, s in remote:
+            self._cache_share[n] = min(usable * s // total_remote, s)
+            self._resident[n] = 0
+        self.plan = plan
+        self._finalized = True
+        return plan
+
+    # -- iteration structure -------------------------------------------------
+    @contextlib.contextmanager
+    def step(self):
+        """One outer iteration.
+
+        Dual buffer: at step exit, this step's read set is prefetched for the
+        next iteration into the idle buffer half. The reads are *posted* at
+        the moment the body's own fetches completed (when the idle half was
+        freed), so they overlap this step's compute on the fabric — the §4.2
+        overlap. The access barrier stays at first use (next step's fetch).
+        """
+        self._check_final()
+        self._read_set.clear()
+        self._fetches_done_at = self.clock.now(self.timeline)
+        yield self
+        self._epoch += 1
+        if self.dual_buffer:
+            for name in sorted(self._read_set):
+                meta = self.metadata.get(name)
+                if meta.tier is Tier.REMOTE:
+                    self._prefetched[name] = self._issue_chunked_read(
+                        name, issue_at=self._fetches_done_at
+                    )
+
+    # -- data path ----------------------------------------------------------
+    def fetch(self, name: str) -> np.ndarray:
+        """Synchronous read; barrier deferred to this call site (§5).
+
+        The prefetched portion (bounded by the idle buffer half, §4.2 "the
+        largest possible portion that fits") is waited on; any remainder is
+        fetched on demand, window-synchronously — only one buffer-half's
+        worth of reads can be outstanding, which is what keeps tiny local
+        budgets slow (§6.1.1).
+        """
+        self._check_final()
+        self._read_set.add(name)
+        lo = self._live[name]
+        meta = self.metadata.get(name)
+        if meta.tier is not Tier.REMOTE:
+            return lo.data
+        size = meta.size_bytes - self._resident.get(name, 0)
+        covered = 0
+        if name in self._prefetched:
+            done, covered = self._prefetched.pop(name)
+            self.clock.wait_until(self.timeline, done)  # access barrier
+        remainder = max(size - covered, 0)
+        if remainder > 0:
+            chunk = self._chunk_bytes()
+            res = self.store.resources[0]
+            obj = self.store._objects[name]
+            t = max(self.clock.now(self.timeline), obj.pending_write_until)
+            mode = "windowed" if self.dual_buffer else "serial"
+            _s, done = res.issue_stream("read", remainder, chunk, t,
+                                        pipelined=mode)
+            self.clock.wait_until(self.timeline, done)
+        self._resident[name] = self._cache_share.get(name, 0)
+        self._track_cache(lo.obj.size_bytes)
+        data = self.store._objects[name].data.copy()
+        self._fetches_done_at = self.clock.now(self.timeline)
+        return data
+
+    def commit(self, name: str, array: np.ndarray) -> None:
+        """Write back an updated object (async demotion if REMOTE)."""
+        self._check_final()
+        lo = self._live[name]
+        meta = self.metadata.get(name)
+        array = np.asarray(array)
+        if meta.tier is not Tier.REMOTE:
+            lo.data = np.array(array, copy=True)
+            self.metadata.update(name, epoch=self._epoch, status=Status.PRESENT)
+            return
+        chunk = self._chunk_bytes()
+        flat = array.reshape(-1)
+        # async posted writes stream at line rate; the timeline doesn't wait
+        res = self.store.resources[0]
+        t = self.clock.now(self.timeline)
+        _s, end = res.issue_stream("write", meta.size_bytes, chunk, t,
+                                   pipelined=True)
+        obj = self.store._objects[name]
+        with obj.lock:
+            obj.data = np.array(flat, copy=True).reshape(obj.data.shape)
+            obj.pending_write_until = max(obj.pending_write_until, end)
+        self.metadata.update(name, epoch=self._epoch, status=Status.DIRTY)
+        # the local copy in the cache region is the freshest: stays resident
+        self._resident[name] = self._cache_share.get(name, 0)
+        if self.sync_writes:
+            self.clock.wait_until(self.timeline, end)
+
+    def charge_compute(self, *, flops: float = 0.0, bytes_touched: float = 0.0,
+                       us: float | None = None) -> float:
+        """Advance the compute timeline (roofline-style max of terms)."""
+        if us is None:
+            flop_us = flops * self.sim_scale / (self.compute_gflops * 1e3)
+            mem_us = bytes_touched * self.sim_scale / (self.local_mem.read_gbps * 1e3)
+            us = max(flop_us, mem_us)
+        return self.clock.advance(self.timeline, us)
+
+    # -- metrics ---------------------------------------------------------
+    def elapsed_us(self) -> float:
+        return self.clock.now(self.timeline)
+
+    def local_capacity_bytes(self) -> int:
+        return (
+            self.local_region_bytes + self.cache_region_bytes
+            + self.metadata_region_bytes
+        )
+
+    def peak_local_bytes(self) -> int:
+        return (
+            self.local_region_bytes
+            + min(self._peak_cached, self.cache_region_bytes)
+            + self.metadata_region_bytes
+        )
+
+    def stats(self) -> dict[str, Any]:
+        s = self.store.stats()
+        s.update(
+            elapsed_us=self.elapsed_us(),
+            local_capacity_bytes=self.local_capacity_bytes(),
+            peak_local_bytes=self.peak_local_bytes(),
+            epoch=self._epoch,
+            plan=self.plan.summary() if self.plan else None,
+        )
+        return s
+
+    # -- internals --------------------------------------------------------
+    def _chunk_bytes(self) -> int:
+        half = self.cache_region_bytes // 2 if self.dual_buffer else self.cache_region_bytes
+        return max(min(half, self.fabric.max_op_bytes), 4096)
+
+    def _issue_chunked_read(self, name: str, issue_at: float | None = None
+                            ) -> tuple[float, int]:
+        """Post an async prefetch of the non-resident part, bounded by the
+
+        idle buffer half. Returns (completion_time, covered_bytes).
+        """
+        size = self.metadata.get(name).size_bytes
+        size -= self._resident.get(name, 0)
+        half = self._chunk_bytes()
+        covered = min(size, half)
+        if covered <= 0:
+            t = self.clock.now(self.timeline) if issue_at is None else issue_at
+            return t, 0
+        res = self.store.resources[0]
+        obj = self.store._objects[name]
+        t = self.clock.now(self.timeline) if issue_at is None else issue_at
+        t = max(t, obj.pending_write_until)
+        # posted async reads pipeline the RTT (Fig 9/10 mechanism)
+        _s, end = res.issue_stream("read", covered, max(covered // 8, 4096), t,
+                                   pipelined=True)
+        return end, covered
+
+    def _track_cache(self, nbytes: int) -> None:
+        self._cached_now = min(nbytes, self.cache_region_bytes)
+        self._peak_cached = max(self._peak_cached, self._cached_now)
+
+    def _check_final(self) -> None:
+        if not self._finalized:
+            raise RuntimeError("call finalize() before stepping the runtime")
+
+
+def run_iterative(
+    runtime: DolmaRuntime,
+    n_iters: int,
+    body: Callable[[DolmaRuntime, int], None],
+) -> float:
+    """Drive ``body`` for ``n_iters`` steps; return total simulated us."""
+    for it in range(n_iters):
+        with runtime.step():
+            body(runtime, it)
+    # drain async writes so the reported time includes any tail demotion
+    runtime.store.fence(timeline=runtime.timeline)
+    return runtime.elapsed_us()

@@ -1,0 +1,258 @@
+"""Data objects and the object catalog.
+
+DOLMA (§3.2, §4.1) reasons about memory at *data object* granularity. In the
+JAX adaptation a data object is a named pytree leaf of the step function:
+parameters, optimizer moments, activations saved for backward, KV-cache pages,
+and inputs. The :class:`ObjectCatalog` recovers, for every leaf, the statistics
+the paper's allocator interposition would observe at runtime:
+
+  * size in bytes (known at allocation/trace time),
+  * access counts, split into reads and writes (recovered by walking the
+    jaxpr of the step function: an equation consuming a var is a read, an
+    equation producing into an aliased/donated output is a write),
+  * lifetime, in step/iteration units (inputs/params live across iterations;
+    intermediates die within one — mirroring Fig 5's short-lived census).
+
+The catalog is the quantitative basis on which :mod:`repro.core.placement`
+applies the paper's three ranking rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core as jex_core
+
+
+class ObjectKind(enum.Enum):
+    PARAM = "param"
+    OPT_STATE = "opt_state"
+    ACTIVATION = "activation"
+    KV_CACHE = "kv_cache"
+    INPUT = "input"
+    OUTPUT = "output"
+    SCRATCH = "scratch"
+
+
+# The paper's small/large boundary (§3.2, §4.1): one OS page.
+SMALL_OBJECT_BYTES = 4 * 1024
+
+
+@dataclasses.dataclass
+class DataObject:
+    """One named data object and its observed access statistics."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: Any
+    kind: ObjectKind = ObjectKind.PARAM
+    n_reads: int = 0
+    n_writes: int = 0
+    # Lifetime in iterations (paper Fig 5): 0 = dies within one iteration,
+    # math.inf = lives for the whole program (params, persistent state).
+    lifetime_iters: float = math.inf
+    pinned_local: bool = False  # hard pin (e.g. metadata region, RNG keys)
+    # simulated logical size (paper-scale modeling); 0 => real array size
+    sim_bytes: int = 0
+
+    @property
+    def size_bytes(self) -> int:
+        if self.sim_bytes:
+            return self.sim_bytes
+        return int(np.prod(self.shape, dtype=np.int64)) * np.dtype(self.dtype).itemsize
+
+    @property
+    def n_accesses(self) -> int:
+        return self.n_reads + self.n_writes
+
+    @property
+    def write_ratio(self) -> float:
+        total = self.n_accesses
+        return self.n_writes / total if total else 0.0
+
+    @property
+    def is_small(self) -> bool:
+        return self.size_bytes <= SMALL_OBJECT_BYTES
+
+    @property
+    def is_short_lived(self) -> bool:
+        return self.lifetime_iters < 1
+
+
+class ObjectCatalog:
+    """A census of data objects, as DOLMA's interposed allocator would build."""
+
+    def __init__(self, objects: Iterable[DataObject] = ()):  # noqa: D107
+        self._objects: dict[str, DataObject] = {}
+        for obj in objects:
+            self.add(obj)
+
+    # -- construction -----------------------------------------------------
+    def add(self, obj: DataObject) -> None:
+        if obj.name in self._objects:
+            raise ValueError(f"duplicate data object {obj.name!r}")
+        self._objects[obj.name] = obj
+
+    @classmethod
+    def from_pytree(
+        cls,
+        tree: Any,
+        *,
+        prefix: str = "",
+        kind: ObjectKind = ObjectKind.PARAM,
+    ) -> "ObjectCatalog":
+        """Catalog the leaves of a pytree (sizes only; no access stats)."""
+        catalog = cls()
+        leaves = jax.tree_util.tree_leaves_with_path(tree)
+        for path, leaf in leaves:
+            name = prefix + jax.tree_util.keystr(path)
+            catalog.add(
+                DataObject(
+                    name=name,
+                    shape=tuple(getattr(leaf, "shape", ())),
+                    dtype=getattr(leaf, "dtype", jnp.float32),
+                    kind=kind,
+                )
+            )
+        return catalog
+
+    @classmethod
+    def from_step_fn(
+        cls,
+        step_fn: Callable[..., Any],
+        *args: Any,
+        kinds: Sequence[ObjectKind] | None = None,
+        donate_argnums: Sequence[int] = (),
+    ) -> "ObjectCatalog":
+        """Trace ``step_fn(*args)`` and recover per-leaf access statistics.
+
+        ``kinds[i]`` labels every leaf of ``args[i]``. Donated arguments are
+        treated as read+written (in-place update across iterations), which is
+        how params/optimizer state behave in a training step.
+        """
+        if kinds is None:
+            kinds = [ObjectKind.INPUT] * len(args)
+        closed = jax.make_jaxpr(step_fn)(*args)
+        jaxpr = closed.jaxpr
+
+        # Map each flat invar to a (name, kind, donated) record.
+        flat_records: list[tuple[str, ObjectKind, bool]] = []
+        for i, arg in enumerate(args):
+            donated = i in donate_argnums
+            for path, _leaf in jax.tree_util.tree_leaves_with_path(arg):
+                name = f"arg{i}{jax.tree_util.keystr(path)}"
+                flat_records.append((name, kinds[i], donated))
+        if len(flat_records) != len(jaxpr.invars):
+            raise AssertionError(
+                f"flattened {len(flat_records)} leaves but jaxpr has "
+                f"{len(jaxpr.invars)} invars"
+            )
+
+        read_counts = {id(v): 0 for v in jaxpr.invars}
+        _count_var_reads(jaxpr, read_counts)
+
+        catalog = cls()
+        for (name, kind, donated), var in zip(flat_records, jaxpr.invars):
+            aval = var.aval
+            n_reads = read_counts.get(id(var), 0)
+            lifetime = math.inf if kind in (
+                ObjectKind.PARAM,
+                ObjectKind.OPT_STATE,
+                ObjectKind.KV_CACHE,
+            ) else 0
+            catalog.add(
+                DataObject(
+                    name=name,
+                    shape=tuple(aval.shape),
+                    dtype=aval.dtype,
+                    kind=kind,
+                    n_reads=n_reads,
+                    n_writes=1 if donated or kind is ObjectKind.OPT_STATE else 0,
+                    lifetime_iters=lifetime,
+                )
+            )
+        return catalog
+
+    # -- queries ------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._objects)
+
+    def __iter__(self):
+        return iter(self._objects.values())
+
+    def __getitem__(self, name: str) -> DataObject:
+        return self._objects[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._objects
+
+    def names(self) -> list[str]:
+        return list(self._objects)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(o.size_bytes for o in self)
+
+    def large_objects(self) -> list[DataObject]:
+        return [o for o in self if not o.is_small]
+
+    def small_objects(self) -> list[DataObject]:
+        return [o for o in self if o.is_small]
+
+    def census(self) -> Mapping[str, Any]:
+        """Summary statistics mirroring the paper's Fig 5 analysis."""
+        large = self.large_objects()
+        small = self.small_objects()
+        total = self.total_bytes or 1
+        return {
+            "n_objects": len(self),
+            "n_large": len(large),
+            "n_small": len(small),
+            "bytes_total": self.total_bytes,
+            "bytes_large": sum(o.size_bytes for o in large),
+            "bytes_small": sum(o.size_bytes for o in small),
+            "large_fraction_of_peak": sum(o.size_bytes for o in large) / total,
+            "n_short_lived": sum(1 for o in self if o.is_short_lived),
+        }
+
+
+def _count_var_reads(jaxpr: jex_core.Jaxpr, counts: dict[int, int]) -> None:
+    """Count how many equations read each var in ``counts`` (recursing into
+
+    sub-jaxprs through their invar->outer-var binding so params threaded into
+    ``scan``/``pjit``/``remat`` bodies are attributed to the outer object).
+    """
+    for eqn in jaxpr.eqns:
+        sub_jaxprs: list[tuple[jex_core.Jaxpr, list[Any]]] = []
+        for param in eqn.params.values():
+            if isinstance(param, jex_core.ClosedJaxpr):
+                sub_jaxprs.append((param.jaxpr, list(eqn.invars)))
+            elif isinstance(param, jex_core.Jaxpr):
+                sub_jaxprs.append((param, list(eqn.invars)))
+        for var in eqn.invars:
+            if isinstance(var, jex_core.Literal):
+                continue
+            if id(var) in counts:
+                counts[id(var)] += 1
+        for sub, outer_invars in sub_jaxprs:
+            # Bind sub invars to outer vars where arity lines up (call-like
+            # primitives). Conservative: mismatched arities are skipped.
+            if len(sub.invars) <= len(outer_invars):
+                binding = dict(
+                    zip(
+                        (id(v) for v in sub.invars),
+                        outer_invars[len(outer_invars) - len(sub.invars):],
+                    )
+                )
+                sub_counts = {id(v): 0 for v in sub.invars}
+                _count_var_reads(sub, sub_counts)
+                for sub_id, outer_var in binding.items():
+                    if isinstance(outer_var, jex_core.Literal):
+                        continue
+                    if id(outer_var) in counts:
+                        counts[id(outer_var)] += sub_counts.get(sub_id, 0)

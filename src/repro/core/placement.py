@@ -1,0 +1,119 @@
+"""Remote data-object selection — the paper's §4.1 policy, verbatim.
+
+Given an :class:`ObjectCatalog` and a local-memory budget (a fraction of peak
+usage, matching the paper's 1/5/20/50/70/100 % evaluation axis), decide which
+objects to demote to remote memory:
+
+  rule 1: large objects first, by size descending;
+  rule 2: ties broken by access count ascending (cold objects remote);
+  rule 3: further ties broken by write ratio descending (remote prefers writes).
+
+Small (<= 4 KiB) and short-lived objects stay local (they are served by the
+local data-object region / remote atomics, §4.1). Pinned objects never move.
+
+The resulting :class:`PlacementPlan` is consumed by two backends:
+  * the host runtime (:mod:`repro.core.remote_store` + dual buffer), and
+  * the compiled-graph tiering (:mod:`repro.core.tiering`) which maps
+    REMOTE -> host memory-kind offload or FSDP gather-streaming.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+from repro.core.metadata import Tier
+from repro.core.objects import DataObject, ObjectCatalog
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPlan:
+    tiers: Mapping[str, Tier]
+    local_bytes: int
+    remote_bytes: int
+    peak_bytes: int
+    budget_bytes: int
+
+    @property
+    def local_fraction(self) -> float:
+        return self.local_bytes / self.peak_bytes if self.peak_bytes else 1.0
+
+    @property
+    def memory_saving(self) -> float:
+        """Fraction of peak memory moved off the local node (paper: up to 63%)."""
+        return self.remote_bytes / self.peak_bytes if self.peak_bytes else 0.0
+
+    def tier_of(self, name: str) -> Tier:
+        return self.tiers[name]
+
+    def remote_names(self) -> list[str]:
+        return [n for n, t in self.tiers.items() if t is Tier.REMOTE]
+
+    def local_names(self) -> list[str]:
+        return [n for n, t in self.tiers.items() if t is not Tier.REMOTE]
+
+    def summary(self) -> dict:
+        return {
+            "peak_bytes": self.peak_bytes,
+            "budget_bytes": self.budget_bytes,
+            "local_bytes": self.local_bytes,
+            "remote_bytes": self.remote_bytes,
+            "local_fraction": round(self.local_fraction, 4),
+            "memory_saving": round(self.memory_saving, 4),
+            "n_remote": len(self.remote_names()),
+            "n_local": len(self.local_names()),
+        }
+
+
+def demotion_order(objects: Iterable[DataObject]) -> list[DataObject]:
+    """Paper §4.1 ranking: size desc, then accesses asc, then write-ratio desc."""
+    eligible = [
+        o for o in objects
+        if not o.is_small and not o.is_short_lived and not o.pinned_local
+    ]
+    return sorted(
+        eligible,
+        key=lambda o: (-o.size_bytes, o.n_accesses, -o.write_ratio, o.name),
+    )
+
+
+class PlacementPolicy:
+    """DOLMA's remote-object selection."""
+
+    def __init__(self, *, small_object_local: bool = True,
+                 all_large_remote: bool = False):
+        self.small_object_local = small_object_local
+        # Fig-7 evaluation mode (§6.1): the x-axis budget is the *registered*
+        # region (remote-DO cache + metadata); every large object is remote
+        # and the compute node keeps only small objects + the cache.
+        self.all_large_remote = all_large_remote
+
+    def plan(
+        self,
+        catalog: ObjectCatalog,
+        *,
+        local_fraction: float | None = None,
+        local_budget_bytes: int | None = None,
+    ) -> PlacementPlan:
+        """Demote ranked objects until local usage fits the budget."""
+        peak = catalog.total_bytes
+        if local_budget_bytes is None:
+            if local_fraction is None:
+                raise ValueError("pass local_fraction or local_budget_bytes")
+            local_budget_bytes = int(peak * local_fraction)
+
+        tiers: dict[str, Tier] = {o.name: Tier.LOCAL for o in catalog}
+        local_bytes = peak
+        for obj in demotion_order(catalog):
+            if not self.all_large_remote and local_bytes <= local_budget_bytes:
+                break
+            tiers[obj.name] = Tier.REMOTE
+            local_bytes -= obj.size_bytes
+
+        remote_bytes = peak - local_bytes
+        return PlacementPlan(
+            tiers=tiers,
+            local_bytes=local_bytes,
+            remote_bytes=remote_bytes,
+            peak_bytes=peak,
+            budget_bytes=local_budget_bytes,
+        )

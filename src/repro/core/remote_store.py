@@ -1,0 +1,200 @@
+"""Remote memory node emulation: sync reads, async writes, atomics, locks.
+
+Host memory stands in for the memory node; every transfer is (a) actually
+performed (numpy copy — so workloads compute correct results) and (b) charged
+to the fabric performance model on the :class:`SimClock`. The semantics follow
+the paper:
+
+  * **reads are synchronous** — the issuing timeline blocks until completion
+    (the access barrier, §4.2 step 3);
+  * **writes are asynchronous** — issued and forgotten; a ``fence`` (or a
+    subsequent read of the same object, read-after-write) waits for them
+    (§4.2 "asynchronous remote memory write");
+  * **atomics** serve small shared objects (§4.1);
+  * **per-object locks** implement the shared-object write lock (§4.3).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.fabric import FabricModel, FabricResource, INFINIBAND_100G, SimClock
+
+
+class RemoteObject:
+    __slots__ = ("name", "data", "lock", "pending_write_until", "epoch")
+
+    def __init__(self, name: str, data: np.ndarray):
+        self.name = name
+        self.data = data
+        self.lock = threading.Lock()  # fine-grained shared-object lock (§4.3)
+        self.pending_write_until = 0.0  # sim-time when last async write lands
+        self.epoch = 0
+
+
+class RemoteStore:
+    """The memory node. One or more fabric resources (QPs) reach it."""
+
+    def __init__(
+        self,
+        *,
+        clock: SimClock | None = None,
+        fabric: FabricModel = INFINIBAND_100G,
+        n_resources: int = 1,
+    ) -> None:
+        self.clock = clock or SimClock()
+        self.fabric = fabric
+        self.resources = [FabricResource(self.clock, fabric) for _ in range(n_resources)]
+        self._objects: dict[str, RemoteObject] = {}
+        self._atomics: dict[str, int] = {}
+        self._lock = threading.RLock()
+
+    # -- allocation -------------------------------------------------------
+    def alloc(self, name: str, array: np.ndarray) -> None:
+        with self._lock:
+            if name in self._objects:
+                raise ValueError(f"remote object {name!r} exists")
+            self._objects[name] = RemoteObject(name, np.array(array, copy=True))
+
+    def free(self, name: str) -> None:
+        with self._lock:
+            self._objects.pop(name, None)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._objects
+
+    def nbytes(self, name: str) -> int:
+        return self._objects[name].data.nbytes
+
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(o.data.nbytes for o in self._objects.values())
+
+    # -- data path ----------------------------------------------------------
+    def read(
+        self,
+        name: str,
+        *,
+        timeline: str = "main",
+        resource: FabricResource | None = None,
+        offset: int = 0,
+        nbytes: int | None = None,
+        issue_at_us: float | None = None,
+        sync: bool = True,
+    ) -> tuple[np.ndarray, float]:
+        """One-sided read; returns (data, completion_time_us).
+
+        Read-after-write consistency: a read waits for any in-flight async
+        write to the same object (the fabric's completion-queue ordering the
+        paper relies on, §4.1 last para).
+        """
+        obj = self._objects[name]
+        res = resource or self.resources[0]
+        t_issue = self.clock.now(timeline) if issue_at_us is None else issue_at_us
+        t_issue = max(t_issue, obj.pending_write_until)  # RAW ordering
+        flat = obj.data.reshape(-1).view(np.uint8)
+        if nbytes is None:
+            nbytes = flat.nbytes - offset
+        _start, end = res.issue("read", nbytes, t_issue)
+        if sync:
+            self.clock.wait_until(timeline, end)
+        chunk = np.array(flat[offset : offset + nbytes], copy=True)
+        return chunk, end
+
+    def read_object(
+        self, name: str, *, timeline: str = "main",
+        resource: FabricResource | None = None,
+    ) -> tuple[np.ndarray, float]:
+        """Fetch the whole object (shaped), synchronously."""
+        obj = self._objects[name]
+        raw, end = self.read(name, timeline=timeline, resource=resource)
+        return raw.view(obj.data.dtype).reshape(obj.data.shape), end
+
+    def write(
+        self,
+        name: str,
+        array: np.ndarray,
+        *,
+        timeline: str = "main",
+        resource: FabricResource | None = None,
+        epoch: int | None = None,
+        sync: bool = False,
+    ) -> float:
+        """One-sided write. Async by default: data lands, timeline doesn't wait."""
+        obj = self._objects[name]
+        if array.nbytes != obj.data.nbytes:
+            raise ValueError(
+                f"size mismatch writing {name!r}: {array.nbytes} != {obj.data.nbytes}"
+            )
+        res = resource or self.resources[0]
+        t_issue = self.clock.now(timeline)
+        _start, end = res.issue("write", array.nbytes, t_issue)
+        with obj.lock:
+            obj.data = np.array(array, copy=True).reshape(obj.data.shape)
+            obj.pending_write_until = max(obj.pending_write_until, end)
+            if epoch is not None:
+                obj.epoch = epoch
+        if sync:
+            self.clock.wait_until(timeline, end)
+        return end
+
+    def fence(self, names: Iterable[str] | None = None, *, timeline: str = "main") -> float:
+        """Memory barrier: wait for pending writes (all, or the given set)."""
+        with self._lock:
+            objs = (
+                list(self._objects.values())
+                if names is None
+                else [self._objects[n] for n in names]
+            )
+        t = max([o.pending_write_until for o in objs], default=0.0)
+        return self.clock.wait_until(timeline, t)
+
+    # -- atomics for small shared objects (§4.1) ----------------------------
+    def atomic_fetch_add(self, key: str, delta: int, *, timeline: str = "main") -> int:
+        res = self.resources[0]
+        t_issue = self.clock.now(timeline)
+        _start, end = res.issue("atomic", 8, t_issue)
+        self.clock.wait_until(timeline, end)
+        with self._lock:
+            old = self._atomics.get(key, 0)
+            self._atomics[key] = old + delta
+            return old
+
+    def atomic_cas(self, key: str, expected: int, new: int, *, timeline: str = "main") -> bool:
+        res = self.resources[0]
+        t_issue = self.clock.now(timeline)
+        _start, end = res.issue("atomic", 8, t_issue)
+        self.clock.wait_until(timeline, end)
+        with self._lock:
+            if self._atomics.get(key, 0) == expected:
+                self._atomics[key] = new
+                return True
+            return False
+
+    def atomic_read(self, key: str) -> int:
+        with self._lock:
+            return self._atomics.get(key, 0)
+
+    # -- checkpointing hooks ------------------------------------------------
+    def snapshot_objects(self) -> dict[str, np.ndarray]:
+        with self._lock:
+            return {n: np.array(o.data, copy=True) for n, o in self._objects.items()}
+
+    def restore_objects(self, blobs: dict[str, np.ndarray]) -> None:
+        with self._lock:
+            for name, data in blobs.items():
+                if name in self._objects:
+                    self._objects[name].data = np.array(data, copy=True)
+                else:
+                    self._objects[name] = RemoteObject(name, np.array(data, copy=True))
+
+    # -- stats ----------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "bytes_read": sum(r.bytes_read for r in self.resources),
+            "bytes_written": sum(r.bytes_written for r in self.resources),
+            "n_ops": sum(r.n_ops for r in self.resources),
+            "n_objects": len(self._objects),
+        }

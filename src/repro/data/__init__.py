@@ -1,0 +1,1 @@
+from repro.data.pipeline import PrefetchingLoader, SyntheticTokenDataset, device_put_fn

@@ -1,0 +1,25 @@
+"""The paper's eight evaluated workloads, implemented on DolmaRuntime."""
+from repro.hpc.base import HPCWorkload, WorkloadResult, run_workload
+from repro.hpc.bt import BT
+from repro.hpc.cg import CG
+from repro.hpc.ft import FT
+from repro.hpc.is_sort import IS
+from repro.hpc.lu import LU
+from repro.hpc.mg import MG
+from repro.hpc.miniamr import MiniAMR
+from repro.hpc.xsbench import XSBench
+
+WORKLOADS = {
+    "CG": CG,
+    "MG": MG,
+    "FT": FT,
+    "BT": BT,
+    "LU": LU,
+    "IS": IS,
+    "XSBench": XSBench,
+    "miniAMR": MiniAMR,
+}
+
+__all__ = ["HPCWorkload", "WORKLOADS", "WorkloadResult", "run_workload"] + list(
+    WORKLOADS
+)

@@ -1,0 +1,91 @@
+"""Common scaffolding for the paper's eight HPC workloads.
+
+Each workload allocates its dominant data objects (named exactly as the
+paper's Table 1), performs *real* numerical iterations (numpy, deterministic)
+through a :class:`DolmaRuntime` — so results are bit-comparable against an
+untiered oracle run — and charges an analytic compute cost (roofline max of
+FLOP and local-memory time) to the simulated clock.
+
+Sizes default to 1/1000 of the paper's Table 1 footprints; the relative
+object/budget/fabric ratios (which drive Fig 7/9/10) are scale-invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.dual_buffer import DolmaRuntime
+from repro.core.objects import ObjectKind
+
+MB = 1 << 20
+
+
+@dataclasses.dataclass
+class WorkloadResult:
+    name: str
+    elapsed_us: float
+    checksum: float
+    stats: dict[str, Any]
+
+
+class HPCWorkload:
+    """Subclasses set ``name``, table-1 metadata, and implement the body."""
+
+    name: str = "base"
+    characteristics: str = ""
+    # Table 1 metadata (for reporting; actual ratios emerge from the run)
+    paper_total_gb: float = 0.0
+    paper_remote_gb: float = 0.0
+    read_write_ratio: str = "1:1"
+    parallel_efficiency: float = 0.95  # fig-8 intrinsic scaling (Amdahl)
+
+    def __init__(self, scale: float = 1.0, seed: int = 0):
+        self.scale = scale
+        self.rng = np.random.default_rng(seed)
+
+    # -- interface ---------------------------------------------------------
+    def register(self, rt: DolmaRuntime) -> None:
+        raise NotImplementedError
+
+    def iterate(self, rt: DolmaRuntime, it: int) -> None:
+        raise NotImplementedError
+
+    def checksum(self, rt: DolmaRuntime) -> float:
+        raise NotImplementedError
+
+    # per-iteration analytic cost (filled by register())
+    flops_per_iter: float = 0.0
+    bytes_per_iter: float = 0.0
+
+    # fig-8 model inputs (filled by register())
+    fetch_bytes_per_iter: int = 0
+    write_bytes_per_iter: int = 0
+
+    # -- helpers ------------------------------------------------------------
+    def _target_bytes(self, paper_gb: float) -> int:
+        return max(int(paper_gb * 1e9 / 1000 * self.scale), 1 * MB)
+
+    def charge(self, rt: DolmaRuntime) -> None:
+        rt.charge_compute(flops=self.flops_per_iter,
+                          bytes_touched=self.bytes_per_iter)
+
+
+def run_workload(
+    workload: HPCWorkload,
+    rt: DolmaRuntime,
+    n_iters: int = 5,
+) -> WorkloadResult:
+    workload.register(rt)
+    rt.finalize()
+    for it in range(n_iters):
+        with rt.step():
+            workload.iterate(rt, it)
+    rt.store.fence(timeline=rt.timeline)
+    return WorkloadResult(
+        name=workload.name,
+        elapsed_us=rt.elapsed_us(),
+        checksum=workload.checksum(rt),
+        stats=rt.stats(),
+    )

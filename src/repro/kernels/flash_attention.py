@@ -1,0 +1,132 @@
+"""Flash attention Pallas TPU kernel (blockwise online softmax).
+
+Grid (batch, head, q-block, kv-block) with the kv dim minor: TPU executes the
+minor grid dim sequentially per core, so the (m, l, acc) running statistics
+live in VMEM scratch carried across kv steps. K/V blocks arrive through the
+BlockSpec pipeline, which is itself double-buffered by the Pallas runtime —
+the same dual-buffer structure as DOLMA's remote-object cache, provided by
+the compiler instead of hand-rolled DMA (contrast: streaming_matmul.py).
+
+Causal masking is exact per tile; fully-masked tiles are skipped with
+pl.when (the diagonal-skip the jnp fallback approximates with strips).
+Supports GQA (KV-head index map), sliding windows, and MLA's distinct v dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int | None,
+            block_q: int, block_k: int, n_kb: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qb * block_q
+    k_lo = kb * block_k
+    # tile-level causal/window skip (exact diagonal skipping)
+    live = True
+    if causal:
+        live = k_lo <= q_lo + block_q - 1
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + block_k > q_lo - window + 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ki = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= ki <= qi
+        if window is not None:
+            mask &= ki > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l_safe = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0, 0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention_tpu(
+    q: jax.Array,    # (B, H, Sq, D)
+    k: jax.Array,    # (B, KV, Sk, D)
+    v: jax.Array,    # (B, KV, Sk, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KV, Sk, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_kb = Sk // block_k
+
+    grid = (B, H, Sq // block_q, n_kb)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, n_kb=n_kb,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qb, kb: (b, h, qb, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qb, kb: (b, h // G, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, Dv),
+                         lambda b, h, qb, kb: (b, h // G, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, Dv), lambda b, h, qb, kb: (b, h, qb, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

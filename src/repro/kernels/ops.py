@@ -1,0 +1,76 @@
+"""Jit'd wrappers around the Pallas kernels (the public kernel API).
+
+On CPU backends (this container) the kernels run in interpret mode (the
+kernel body executes in Python for correctness validation); on TPU backends
+they compile natively. ``ssd_block`` also does the cheap chunking/cumsum prep
+that feeds the SSD kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.ssd_scan import ssd_chunk_scan_tpu
+from repro.kernels.streaming_matmul import streaming_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def matmul(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    kw.setdefault("interpret", not _on_tpu())
+    return streaming_matmul(x, w, **kw)
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              block_q=512, block_k=512, interpret=None):
+    """q: (B,Sq,H,D), k/v: (B,Sk,KV,*) -> (B,Sq,H,Dv) (layout-matched to
+
+    repro.models.flash.flash_attention)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    o = flash_attention_tpu(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xh, Bm, Cm, dt, A, *, chunk: int = 128, interpret: bool | None = None):
+    """Mamba2 SSD via the chunk kernel.
+
+    xh: (B,L,H,P); Bm/Cm: (B,L,G,N); dt: (B,L,H) fp32 post-softplus;
+    A: (H,) negative. Returns y: (B,L,H,P) fp32.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    rep = H // G
+
+    def chunked(t, tail):  # (B,L,H,...) -> (B,H,nc,Q,...)
+        return jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 3, 1)
+
+    xc = chunked(xh, ())
+    bh = jnp.repeat(Bm, rep, axis=2)
+    ch = jnp.repeat(Cm, rep, axis=2)
+    bc = chunked(bh, ())
+    cc = chunked(ch, ())
+    dA = dt * A  # (B,L,H)
+    dAc = chunked(dA[..., None], ())[..., 0]
+    dtc = chunked(dt[..., None], ())[..., 0]
+    cum = jnp.cumsum(dAc, axis=-1)
+    y = ssd_chunk_scan_tpu(
+        xc.astype(jnp.float32), bc.astype(jnp.float32), cc.astype(jnp.float32),
+        dtc.astype(jnp.float32), cum.astype(jnp.float32), interpret=interpret,
+    )
+    return jnp.moveaxis(y, 1, 3).reshape(B, L, H, P)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import reference_attention as _ref_attn
+from repro.models.ssm import ssd_reference_recurrent
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def flash_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B,H,Sq,D), k/v: (B,KV,Sk,*) -> (B,H,Sq,Dv)."""
+    o = _ref_attn(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal, window=window, scale=scale,
+    )
+    return o.transpose(0, 2, 1, 3)
+
+
+def ssd_ref(xc, bc, cc, dtc, cum):
+    """Recurrent oracle on the same precomputed chunk tensors.
+
+    xc: (B,H,nc,Q,P), bc/cc: (B,H,nc,Q,N), dtc/cum: (B,H,nc,Q).
+    Recover flat (B,L,H,P) layouts and run the O(L) recurrence; A*dt is
+    recovered from the chunkwise inclusive cumsum.
+    """
+    B, H, nc, Q, P = xc.shape
+    N = bc.shape[-1]
+    to_flat = lambda t, tail: jnp.moveaxis(t, 1, 3).reshape(B, nc * Q, H, *tail)
+    xh = to_flat(xc, (P,))
+    Bm = to_flat(bc, (N,))
+    Cm = to_flat(cc, (N,))
+    dt = to_flat(dtc[..., None], (1,))[..., 0]
+    # dA = diff of inclusive cumsum within each chunk
+    dA = jnp.concatenate(
+        [cum[..., :1], cum[..., 1:] - cum[..., :-1]], axis=-1
+    )
+    dA_flat = to_flat(dA[..., None], (1,))[..., 0]
+
+    # y_t = C_t . h_t with h_t = exp(dA_t) h_{t-1} + dt_t B_t x_t^T
+    def step(S, t):
+        decay = jnp.exp(dA_flat[:, t])
+        S = S * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], Bm[:, t], xh[:, t]
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Cm[:, t], S)
+        return S, y
+
+    S0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, jnp.arange(nc * Q))
+    y = jnp.moveaxis(ys, 0, 1)  # (B, L, H, P)
+    return jnp.moveaxis(y.reshape(B, nc, Q, H, P), 3, 1)  # (B,H,nc,Q,P)

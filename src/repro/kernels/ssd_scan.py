@@ -1,0 +1,94 @@
+"""Mamba2 SSD chunk kernel (state-space duality) for TPU.
+
+Grid (batch, head, chunk) with the chunk dim minor/sequential: the running
+SSM state (P, N) lives in VMEM scratch and is carried across chunk steps —
+the recurrence the pure-jnp implementation expresses as a lax.scan. Per
+chunk, the intra-chunk quadratic term, the chunk-state construction, and the
+inter-chunk broadcast are all (Q x Q)/(Q x N)/(Q x P) MXU matmuls.
+
+Inputs are the precomputed per-chunk tensors (the cheap cumsum/broadcast prep
+lives in ops.py); everything hot is in the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, state, *, n_chunks):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)     # (Q, P)
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)    # (Q, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)    # (Q, N)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)   # (Q,)
+    cum = cum_ref[0, 0, 0].astype(jnp.float32)
+    Q = x.shape[0]
+    total = cum[Q - 1]
+
+    # intra-chunk: scores (Q,Q) = C_i . B_j, decay L[i,j] = exp(cum_i - cum_j)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    lmat = jnp.exp(cum[:, None] - cum[None, :]) * dt[None, :]
+    lmat = jnp.where(li >= lj, lmat, 0.0)
+    y_intra = jax.lax.dot_general(
+        scores * lmat, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk: contribution of the carried state
+    y_inter = jax.lax.dot_general(
+        Cm, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)[:, None]                   # (Q, P)
+
+    # chunk-local state and carry update
+    decay_out = (jnp.exp(total - cum) * dt)[:, None] * Bm       # (Q, N)
+    s_local = jax.lax.dot_general(
+        x, decay_out, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                            # (P, N)
+    state[...] = jnp.exp(total) * state[...] + s_local
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_scan_tpu(
+    xc: jax.Array,    # (B, H, nc, Q, P)
+    bc: jax.Array,    # (B, H, nc, Q, N)  (per-head broadcast B)
+    cc: jax.Array,    # (B, H, nc, Q, N)
+    dtc: jax.Array,   # (B, H, nc, Q)     fp32 (softplus'd dt)
+    cum: jax.Array,   # (B, H, nc, Q)     fp32 inclusive cumsum of dt*A
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, nc, Q, P = xc.shape
+    N = bc.shape[-1]
+    grid = (B, H, nc)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Q, P), xc.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, bc, cc, dtc, cum)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve entry points.
+
+NOTE: import repro.launch.dryrun only as a __main__ module (it sets XLA_FLAGS
+before importing jax).
+"""

@@ -1,0 +1,394 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. runs the DOLMA placement decision (:func:`decide_tiering`) over the
+     persistent objects to pick sharding rules + moment offload,
+  3. lowers and compiles the train_step / prefill / serve_step with explicit
+     in/out shardings,
+  4. records memory_analysis(), cost_analysis(), and the loop-corrected HLO
+     analysis (FLOPs / bytes / collective bytes) for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --multi-pod
+Results land in benchmarks/results/dryrun/<arch>__<cell>__<mesh>.json.
+"""
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs import ARCH_IDS, SHAPE_CELLS, get_config, runnable_cells
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import parse_module
+from repro.models import batch_specs, get_model
+from repro.core.tiering import supports_host_offload_spmd
+from repro.models.sharding import (
+    batch_pspec_tree,
+    cache_pspec_tree,
+    opt_pspec_tree,
+    params_pspec_tree,
+    shard_factor,
+    use_mesh,
+    use_rules,
+)
+from repro.optim import AdamWConfig
+from repro.optim.adamw import init as adamw_init
+from repro.train.step import TrainStepConfig, make_train_step
+
+HBM_BYTES = 16e9          # TPU v5e per-chip HBM
+HBM_BUDGET_FRACTION = 0.9
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _tree_device_bytes(abstract_tree, pspec_tree, mesh) -> int:
+    leaves = jax.tree.leaves(abstract_tree)
+    specs = jax.tree.leaves(pspec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    total = 0
+    for leaf, spec in zip(leaves, specs):
+        size = int(np.prod(leaf.shape, dtype=np.int64)) * np.dtype(leaf.dtype).itemsize
+        total += size // shard_factor(spec, mesh)
+    return total
+
+
+def decide_tiering(cfg: ModelConfig, cell: ShapeCell, mesh, params_abs) -> dict:
+    """DOLMA's quantitative placement decision at HBM granularity.
+
+    Persistent objects = params + optimizer moments. In placement-policy
+    order (size desc, access asc, write-ratio desc) the moments are demoted
+    first (1 access/step, write-heavy), then params are FSDP-streamed
+    (= fetched per layer through the dual buffer). Returns rule overrides +
+    flags + the byte accounting that justified the decision.
+    """
+    decision: dict[str, Any] = {
+        "rules": {}, "offload_moments": False, "fsdp": False, "notes": [],
+    }
+    with use_mesh(mesh):
+        pspecs = params_pspec_tree(
+            params_abs, expert_sharding=cfg.expert_sharding, mesh=mesh
+        )
+        params_dev = _tree_device_bytes(params_abs, pspecs, mesh)
+        decision["params_bytes_per_dev"] = params_dev
+
+        if cell.kind != "train":
+            if params_dev > HBM_BUDGET_FRACTION * HBM_BYTES:
+                decision["fsdp"] = True
+                decision["rules"]["fsdp"] = "data"
+                with use_rules(fsdp="data"):
+                    pspecs = params_pspec_tree(
+                        params_abs, expert_sharding=cfg.expert_sharding,
+                        fsdp=True, mesh=mesh,
+                    )
+                decision["params_bytes_per_dev"] = _tree_device_bytes(
+                    params_abs, pspecs, mesh
+                )
+                decision["notes"].append("inference params FSDP-sharded (over HBM)")
+            return decision
+
+        # training: decide moment placement down the ladder
+        batch_shards = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.shape:
+                batch_shards *= mesh.shape[ax]
+        b_loc = max(cell.global_batch // batch_shards, 1)
+        sp = mesh.shape.get("model", 1)
+        act_dev = cfg.n_layers * b_loc * cell.seq_len * cfg.d_model * 2 // sp
+        act_dev = int(act_dev * 1.5) + int(2e9)  # carries + working set
+        decision["act_bytes_per_dev_est"] = act_dev
+        budget = HBM_BUDGET_FRACTION * HBM_BYTES
+
+        # moment bytes relative to bf16 param bytes: f32 pair = 4x, bf16 = 2x,
+        # int8 blockwise = ~1.03x
+        moment_factor = {"f32": 4.0, "bf16": 2.0, "int8": 1.03}
+        offload_ok = supports_host_offload_spmd(mesh)
+        decision["host_offload_supported"] = offload_ok
+        moment_style = "f32"
+
+        def projected(style, p_dev, offload):
+            m = 0 if offload else p_dev * moment_factor[style]
+            return p_dev + m + act_dev
+
+        if projected(moment_style, params_dev, False) > budget and offload_ok:
+            decision["offload_moments"] = True
+            decision["notes"].append(
+                "moments -> pinned_host (DOLMA rule: largest, 1 access/step, "
+                "write-heavy)"
+            )
+        if projected(moment_style, params_dev,
+                     decision["offload_moments"]) > budget:
+            decision["fsdp"] = True
+            decision["rules"]["fsdp"] = "data"
+            with use_rules(fsdp="data"):
+                pspecs2 = params_pspec_tree(
+                    params_abs, expert_sharding=cfg.expert_sharding,
+                    fsdp=True, mesh=mesh,
+                )
+            params_dev = _tree_device_bytes(params_abs, pspecs2, mesh)
+            decision["params_bytes_per_dev"] = params_dev
+            decision["notes"].append(
+                "params FSDP-sharded + per-layer gather via dual-buffer scan"
+            )
+        for style in ("f32", "bf16", "int8"):
+            moment_style = style
+            if projected(style, params_dev, decision["offload_moments"]) <= budget:
+                break
+        if moment_style != "f32":
+            decision["notes"].append(
+                f"moments stored as {moment_style} (host offload "
+                f"{'unsupported' if not offload_ok else 'insufficient'} on this "
+                "backend)"
+            )
+        decision["moment_style"] = moment_style
+        decision["moments_bytes_per_dev"] = int(
+            0 if decision["offload_moments"]
+            else params_dev * moment_factor[moment_style]
+        )
+        decision["projected_bytes_per_dev"] = int(
+            projected(moment_style, params_dev, decision["offload_moments"])
+        )
+        return decision
+
+
+def _sharding_tree(pspec_tree, mesh, memory_kind: str | None = None):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec, memory_kind=memory_kind)
+        if memory_kind
+        else NamedSharding(mesh, spec),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "host_argument_bytes": ma.host_argument_size_in_bytes,
+            "host_temp_bytes": ma.host_temp_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        }
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, cell_name: str, *, multi_pod: bool,
+             rules_override: dict | None = None,
+             remat: str = "full", prefetch: bool = True,
+             microbatches: int = 1,
+             offload_override: bool | None = None,
+             fsdp_override: bool | None = None) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    model = get_model(cfg)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record: dict[str, Any] = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_name,
+        "kind": cell.kind, "remat": remat, "prefetch": prefetch,
+        "microbatches": microbatches,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    if cell_name not in runnable_cells(cfg):
+        record["skipped"] = (
+            "long_500k requires sub-quadratic attention; "
+            f"{arch} is full-attention (DESIGN.md §Arch-applicability)"
+        )
+        return record
+
+    t0 = time.time()
+    params_abs = jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg), jax.random.key(0)
+    )
+    decision = decide_tiering(cfg, cell, mesh, params_abs)
+    if rules_override:
+        decision["rules"].update(rules_override)
+    if offload_override is not None:
+        decision["offload_moments"] = offload_override
+    if fsdp_override is not None:
+        decision["fsdp"] = fsdp_override
+        if fsdp_override and "fsdp" not in decision["rules"] and not (
+            rules_override and "fsdp" in rules_override
+        ):
+            decision["rules"]["fsdp"] = "data" 
+    record["tiering"] = {k: v for k, v in decision.items()}
+
+    moe_groups = None
+    if cfg.is_moe and cell.kind == "decode":
+        batch_shards = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.shape:
+                batch_shards *= mesh.shape[ax]
+        moe_groups = max(min(cell.global_batch, batch_shards), 1)
+
+    with use_mesh(mesh), use_rules(**decision["rules"]):
+        pspecs = params_pspec_tree(
+            params_abs, expert_sharding=cfg.expert_sharding,
+            fsdp=decision["fsdp"], mesh=mesh,
+        )
+        p_sh = _sharding_tree(pspecs, mesh)
+
+        if cell.kind == "train":
+            opt_cfg = AdamWConfig(moment_style=decision.get("moment_style", "f32"))
+            step_cfg = TrainStepConfig(
+                remat=remat, prefetch=prefetch, microbatches=microbatches,
+                moe_groups=moe_groups,
+            )
+            train_step = make_train_step(cfg, step_cfg, opt_cfg)
+            opt_abs = jax.eval_shape(
+                functools.partial(adamw_init, opt_cfg), params_abs
+            )
+            mem_kind = "pinned_host" if decision["offload_moments"] else None
+            o_pspecs = opt_pspec_tree(opt_abs, pspecs, mesh)
+            o_sh = _sharding_tree(o_pspecs, mesh, mem_kind)
+            # 'step' and other scalars stay on device
+            if mem_kind:
+                o_sh["step"] = NamedSharding(mesh, jax.sharding.PartitionSpec())
+            batch_abs = batch_specs(cfg, cell)
+            b_sh = _sharding_tree(batch_pspec_tree(batch_abs, mesh), mesh)
+            fn = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params_abs, opt_abs, batch_abs)
+        elif cell.kind == "prefill":
+            def prefill_fn(params, batch):
+                logits, _aux = model.forward(
+                    params, batch, cfg, remat="none", prefetch=prefetch,
+                    moe_groups=None,
+                )
+                return logits[:, -1:, :]
+
+            batch_abs = batch_specs(cfg, cell)
+            b_sh = _sharding_tree(batch_pspec_tree(batch_abs, mesh), mesh)
+            fn = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(params_abs, batch_abs)
+        else:  # decode
+            cache_abs = jax.eval_shape(
+                functools.partial(
+                    model.init_decode_cache, cfg, cell.global_batch, cell.seq_len
+                )
+            )
+            c_sh = _sharding_tree(cache_pspec_tree(cache_abs, mesh), mesh)
+            tok_abs = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+            t_sh = _sharding_tree(
+                batch_pspec_tree({"t": tok_abs}, mesh), mesh
+            )["t"]
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens, cfg,
+                                         moe_groups=moe_groups)
+
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, c_sh, t_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params_abs, cache_abs, tok_abs)
+
+        record["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+
+        record["memory"] = _memory_dict(compiled)
+        try:
+            ca = compiled.cost_analysis()
+            record["xla_cost"] = {
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+            }
+        except Exception as e:  # noqa: BLE001
+            record["xla_cost"] = {"error": str(e)}
+
+        t2 = time.time()
+        text = compiled.as_text()
+        record["hlo_text_bytes"] = len(text)
+        analysis = parse_module(text)
+        record["analysis"] = analysis.summary()
+        # aggregate collectives by (op, group_size) for DCN/ICI attribution
+        agg: dict[str, float] = {}
+        for c in analysis.collectives:
+            key = f"{c.op}@g{c.group_size}"
+            agg[key] = agg.get(key, 0.0) + c.result_bytes * c.multiplier
+        record["collectives_by_group"] = agg
+        record["analyze_s"] = round(time.time() - t2, 2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-prefetch", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--rules", default=None, help="JSON logical-rule overrides")
+    ap.add_argument("--fsdp", action="store_true", help="force FSDP param naming")
+    ap.add_argument("--tag", default=None, help="suffix for result files")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    cells = list(SHAPE_CELLS) if args.cell == "all" else [args.cell]
+    rules = json.loads(args.rules) if args.rules else None
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    for arch in archs:
+        for cell in cells:
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            tag = f"__{args.tag}" if args.tag else ""
+            out = RESULTS_DIR / f"{arch}__{cell}__{mesh_name}{tag}.json"
+            if out.exists() and not args.force:
+                print(f"[skip] {out.name} exists")
+                continue
+            print(f"[dryrun] {arch} x {cell} x {mesh_name} ...", flush=True)
+            try:
+                rec = run_cell(
+                    arch, cell, multi_pod=args.multi_pod,
+                    rules_override=rules, remat=args.remat,
+                    prefetch=not args.no_prefetch,
+                    microbatches=args.microbatches,
+                    fsdp_override=True if args.fsdp else None,
+                )
+            except Exception:  # noqa: BLE001
+                rec = {
+                    "arch": arch, "cell": cell, "mesh": mesh_name,
+                    "error": traceback.format_exc(),
+                }
+                print(rec["error"], flush=True)
+            out.write_text(json.dumps(rec, indent=1, default=str))
+            status = "ERROR" if "error" in rec else (
+                "SKIP" if "skipped" in rec else "ok"
+            )
+            print(f"[done] {out.name}: {status} "
+                  f"(compile {rec.get('compile_s', '-')}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,415 @@
+"""Loop-aware analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — a layer scan's
+while body is counted for a single iteration, which silently understates
+FLOPs/bytes/collectives by n_layers. This module parses ``compiled.as_text()``
+instead and:
+
+  * attributes FLOPs (dot/conv from real operand shapes + contracting dims,
+    elementwise/reduce approximately) per computation,
+  * attributes HBM bytes (operand + result sizes at fusion granularity),
+  * attributes collective bytes (result sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute) plus ring wire-byte
+    estimates from replica_groups,
+  * multiplies through the call graph using each while's
+    ``known_trip_count`` backend_config,
+
+yielding loop-corrected per-device totals — the inputs to the roofline terms
+in EXPERIMENTS.md §Roofline and the per-computation profile used by §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "token": 0, "f4e2m1fn": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _parse_shapes(segment: str) -> list[tuple[str, int]]:
+    """All dtype[dims] occurrences -> [(dtype, elems)]."""
+    return [(m.group(1), _shape_elems(m.group(2)))
+            for m in _SHAPE_RE.finditer(segment)
+            if m.group(1) in _DTYPE_BYTES]
+
+
+def _bytes_of(shapes: Iterable[tuple[str, int]]) -> int:
+    return sum(_DTYPE_BYTES[dt] * n for dt, n in shapes)
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    result_bytes: int
+    group_size: int
+    computation: str
+    multiplier: float = 1.0
+    label: str = ""  # jax op_name metadata (attribution for §Perf)
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring-algorithm bytes on the wire per device."""
+        g = max(self.group_size, 1)
+        if self.op.startswith("all-reduce"):
+            return 2 * (g - 1) / g * self.result_bytes
+        if self.op.startswith("reduce-scatter"):
+            # result is the scattered shard; input = g * result
+            return (g - 1) * self.result_bytes
+        if self.op.startswith("all-gather"):
+            return (g - 1) / g * self.result_bytes
+        if self.op.startswith("all-to-all"):
+            return (g - 1) / g * self.result_bytes
+        return self.result_bytes  # collective-permute
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0       # upper bound: all instruction operands+results
+    bytes_min: float = 0.0   # lower bound: dots/copies/slices/collectives only
+    has_slicing: bool = False  # contains dynamic-slice/gather (sliced reads)
+    # edges: target computation -> (flops_weight, bytes_weight)
+    edges: dict = dataclasses.field(default_factory=dict)
+    collectives: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ModuleAnalysis:
+    flops: float
+    bytes: float
+    bytes_min: float
+    collective_bytes: float        # sum of result sizes (per device)
+    collective_wire_bytes: float   # ring wire estimate (per device)
+    by_collective: dict
+    collectives: list
+    per_computation: dict
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "bytes_min": self.bytes_min,
+            "collective_bytes": self.collective_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "by_collective": dict(self.by_collective),
+        }
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_AFTER_TYPES = re.compile(r"((?:\w[\w\-]*))\(")
+_TRIP = re.compile(r"known_trip_count\":\{\"n\":\"(\d+)\"")
+_BODY = re.compile(r"body=%([\w\.\-]+)")
+_COND = re.compile(r"condition=%([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^\}]*)\}")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{([^\}]*)\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+
+# instructions that move no HBM bytes themselves
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+_ZERO_FLOP_OPS = _ZERO_BYTE_OPS | {
+    "copy", "reshape", "transpose", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "gather",
+    "scatter", "convert", "fusion", "custom-call", "reduce", "select",
+    "compare", "rng-bit-generator",
+} | set(_COLLECTIVES) | {c + "-start" for c in _COLLECTIVES} \
+  | {c + "-done" for c in _COLLECTIVES}
+
+
+def parse_module(text: str) -> ModuleAnalysis:
+    comps: dict[str, CompStats] = {}
+    entry: str | None = None
+    cur: CompStats | None = None
+    cur_name = ""
+    shapes: dict[str, list[tuple[str, int]]] = {}  # per-computation def shapes
+
+    for raw in text.splitlines():
+        header = _COMP_HEADER.match(raw)
+        if header:
+            cur_name = header.group(2)
+            cur = comps.setdefault(cur_name, CompStats())
+            if header.group(1):
+                entry = cur_name
+            shapes = {}
+            continue
+        if cur is None:
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(raw)
+        if not m:
+            continue
+        lhs, rest = m.group(1), m.group(2)
+
+        opm = _OP_AFTER_TYPES.search(rest)
+        if not opm:
+            continue
+        op = opm.group(1)
+        type_segment = rest[: opm.start()]
+        result_shapes = _parse_shapes(type_segment)
+        shapes[lhs] = result_shapes
+        result_bytes = _bytes_of(result_shapes)
+        operand_segment = rest[opm.end():]
+        # cut operands at the closing paren of the op's argument list
+        depth = 1
+        for i, ch in enumerate(operand_segment):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_part = operand_segment[:i]
+                    attr_part = operand_segment[i + 1:]
+                    break
+        else:
+            args_part, attr_part = operand_segment, ""
+
+        # ---- control-flow edges --------------------------------------
+        if op == "while":
+            body = _BODY.search(attr_part)
+            trip_m = _TRIP.search(attr_part)
+            trip = float(trip_m.group(1)) if trip_m else 1.0
+            if body:
+                f, b = cur.edges.get(body.group(1), (0.0, 0.0))
+                cur.edges[body.group(1)] = (f + trip, b + trip)
+            cond = _COND.search(attr_part)
+            if cond:
+                f, b = cur.edges.get(cond.group(1), (0.0, 0.0))
+                cur.edges[cond.group(1)] = (f + trip + 1, b + trip + 1)
+            continue
+        if op == "conditional":
+            br = _BRANCHES.search(attr_part)
+            if br:
+                for name in _OPERANDS.findall(br.group(1)):
+                    f, b = cur.edges.get(name, (0.0, 0.0))
+                    cur.edges[name] = (f + 1.0, b + 1.0)
+        called = _CALLS.search(attr_part)
+        if called:
+            # fusions/reduces contribute FLOPs from inside, but their HBM
+            # traffic is the call-site operands+result (inner is registers)
+            f, b = cur.edges.get(called.group(1), (0.0, 0.0))
+            cur.edges[called.group(1)] = (f + 1.0, b + 0.0)
+
+        # ---- bytes ------------------------------------------------------
+        # HBM-traffic estimate at fusion granularity. Slicing ops move only
+        # the slice (XLA keeps DUS in place), NOT their full operand — the
+        # distinction matters enormously for scan carry stacks.
+        if op in ("dynamic-slice", "gather"):
+            cur.bytes += 2 * result_bytes
+            cur.bytes_min += 2 * result_bytes
+            cur.has_slicing = True
+        elif op == "dynamic-update-slice":
+            operand_names = _OPERANDS.findall(args_part)
+            upd = (
+                _bytes_of(shapes.get(operand_names[1], []))
+                if len(operand_names) > 1 else result_bytes
+            )
+            cur.bytes += 2 * upd
+            cur.bytes_min += 2 * upd
+            cur.has_slicing = True
+        elif op == "fusion":
+            operand_names = _OPERANDS.findall(args_part)
+            called = _CALLS.search(attr_part)
+            sliced = bool(
+                called and comps.get(called.group(1), CompStats()).has_slicing
+            )
+            for nm in operand_names:
+                ob = _bytes_of(shapes.get(nm, []))
+                # a slicing fusion reads only slice-sized pieces of its
+                # oversized operands
+                cur.bytes += min(ob, 2 * max(result_bytes, 1)) if sliced else ob
+            cur.bytes += result_bytes
+        elif op not in _ZERO_BYTE_OPS:
+            operand_names = _OPERANDS.findall(args_part)
+            operand_bytes = sum(
+                _bytes_of(shapes.get(nm, [])) for nm in operand_names
+            )
+            cur.bytes += operand_bytes + result_bytes
+            base_op2 = op[:-6] if op.endswith("-start") else op
+            if op in ("dot", "convolution", "copy", "scatter", "sort",
+                      "concatenate", "pad", "reduce") or base_op2 in _COLLECTIVES:
+                cur.bytes_min += operand_bytes + result_bytes
+
+        # ---- collectives ------------------------------------------------
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES and not op.endswith("-done"):
+            gm = _GROUPS.search(attr_part)
+            if gm:
+                group_size = int(gm.group(2))
+            else:
+                gl = _GROUPS_LIST.search(attr_part)
+                if gl and gl.group(1):
+                    first = gl.group(1).split("}")[0].strip("{ ")
+                    group_size = len([t for t in first.split(",") if t.strip() != ""])
+                else:
+                    group_size = 1
+            # -start results carry (input, output) tuples: take output half
+            rb = result_bytes
+            if op.endswith("-start") and len(result_shapes) >= 2:
+                rb = result_bytes // 2
+            lbl = re.search(r'op_name="([^"]{0,120})', attr_part)
+            cur.collectives.append(
+                Collective(op=base_op, result_bytes=rb, group_size=group_size,
+                           computation=cur_name,
+                           label=lbl.group(1) if lbl else "")
+            )
+
+        # ---- flops ------------------------------------------------------
+        if op == "dot":
+            out_elems = sum(n for _dt, n in result_shapes)
+            lhs_dims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attr_part)
+            operand_names = _OPERANDS.findall(args_part)
+            contract = 1
+            if lhs_dims and operand_names:
+                lhs_shape = shapes.get(operand_names[0], [])
+                dims_str = _SHAPE_RE.search(
+                    # reconstruct dims of first operand from its def
+                    " ".join(
+                        f"{dt}[{n}]" for dt, n in lhs_shape
+                    )
+                )
+                # need actual dim list; re-parse from def line storage
+                contract = _contract_elems(
+                    shapes_raw=_raw_dims.get((cur_name, operand_names[0])),
+                    dims=lhs_dims.group(1),
+                )
+            cur.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            # flops = 2 * out_elems * window_elems * in_channels_per_group,
+            # with the kernel's 'i' dims read via dim_labels (e.g. b0f_i0o->0bf)
+            out_elems = sum(n for _dt, n in result_shapes)
+            operand_names = _OPERANDS.findall(args_part)
+            window_elems = 1
+            wm = re.search(r"window=\{size=([\dx]+)", attr_part)
+            if wm:
+                for wdim in wm.group(1).split("x"):
+                    window_elems *= int(wdim)
+            in_per_group = 1
+            dl = re.search(r"dim_labels=\w+_(\w+)->", attr_part)
+            if dl and len(operand_names) > 1:
+                kdims = _raw_dims.get((cur_name, operand_names[1]))
+                if kdims and len(dl.group(1)) == len(kdims):
+                    for ch, dim in zip(dl.group(1), kdims):
+                        if ch == "i":
+                            in_per_group *= dim
+            cur.flops += 2.0 * out_elems * window_elems * in_per_group
+        elif op not in _ZERO_FLOP_OPS:
+            cur.flops += sum(n for _dt, n in result_shapes)
+        elif op == "reduce":
+            pass  # accounted via to_apply edge? skipped: negligible
+
+        # raw dims bookkeeping for dot contracting lookup
+        _store_raw_dims(cur_name, lhs, type_segment)
+
+    # ---- propagate through the call graph -------------------------------
+    flops_mult: dict[str, float] = defaultdict(float)
+    bytes_mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = max(comps, key=lambda c: comps[c].flops, default="")
+    flops_mult[entry] = 1.0
+    bytes_mult[entry] = 1.0
+    # topological-ish: iterate until fixpoint (call graphs are DAGs; small)
+    for _ in range(64):
+        changed = False
+        for name, st in comps.items():
+            fm, bm = flops_mult.get(name, 0.0), bytes_mult.get(name, 0.0)
+            if fm == 0 and bm == 0:
+                continue
+            for tgt, (fw, bw) in st.edges.items():
+                nf = fm * fw
+                nb = bm * bw
+                if abs(flops_mult[tgt] - nf) > 1e-9 or abs(bytes_mult[tgt] - nb) > 1e-9:
+                    flops_mult[tgt] = nf
+                    bytes_mult[tgt] = nb
+                    changed = True
+        if not changed:
+            break
+
+    total_flops = sum(st.flops * flops_mult.get(n, 0.0) for n, st in comps.items())
+    total_bytes = sum(st.bytes * bytes_mult.get(n, 0.0) for n, st in comps.items())
+    total_bytes_min = sum(
+        st.bytes_min * bytes_mult.get(n, 0.0) for n, st in comps.items()
+    )
+    coll_bytes = 0.0
+    wire_bytes = 0.0
+    by_op: dict[str, float] = defaultdict(float)
+    all_colls: list[Collective] = []
+    for name, st in comps.items():
+        mult = bytes_mult.get(name, 0.0)
+        for c in st.collectives:
+            c.multiplier = mult
+            coll_bytes += c.result_bytes * mult
+            wire_bytes += c.wire_bytes * mult
+            by_op[c.op] += c.result_bytes * mult
+            all_colls.append(c)
+
+    per_comp = {
+        n: {"flops": st.flops, "bytes": st.bytes,
+            "flops_mult": flops_mult.get(n, 0.0)}
+        for n, st in comps.items() if st.flops or st.bytes
+    }
+    _raw_dims.clear()
+    return ModuleAnalysis(
+        flops=total_flops,
+        bytes=total_bytes,
+        bytes_min=total_bytes_min,
+        collective_bytes=coll_bytes,
+        collective_wire_bytes=wire_bytes,
+        by_collective=dict(by_op),
+        collectives=all_colls,
+        per_computation=per_comp,
+    )
+
+
+# -- raw dim bookkeeping for dot contracting-dim lookup ----------------------
+_raw_dims: dict[tuple[str, str], list[int]] = {}
+
+
+def _store_raw_dims(comp: str, name: str, type_segment: str) -> None:
+    m = _SHAPE_RE.search(type_segment)
+    if m and m.group(1) in _DTYPE_BYTES:
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        _raw_dims[(comp, name)] = dims
+
+
+def _contract_elems(shapes_raw: list[int] | None, dims: str) -> int:
+    if not shapes_raw or not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        idx = int(d)
+        if idx < len(shapes_raw):
+            n *= shapes_raw[idx]
+    return n
+
+
+def _last_dim(dims: list[int] | None) -> int | None:
+    return dims[-1] if dims else None

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing this module never touches
+jax device initialization — the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e); multi-pod adds a 2-pod DCN axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for CPU smoke tests of the sharded code paths."""
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware constants (TPU v5e), used by the roofline analysis.
+PEAK_BF16_FLOPS = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~50 GB/s)
+CHIPS_PER_POD = 256

@@ -1,0 +1,4 @@
+"""Model zoo: dense / MoE / MLA / SSM / hybrid / enc-dec / VLM backbones."""
+from repro.models.api import batch_specs, decode_specs, get_model, make_batch
+
+__all__ = ["batch_specs", "decode_specs", "get_model", "make_batch"]

@@ -1,0 +1,60 @@
+"""Family dispatch + batch construction (real arrays and ShapeDtypeStructs)."""
+from __future__ import annotations
+
+import types
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec, transformer
+
+
+def get_model(cfg: ModelConfig) -> types.ModuleType:
+    """Returns the module implementing the uniform model API for ``cfg``."""
+    return encdec if cfg.family in ("encdec", "audio") else transformer
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one train/prefill batch (no allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: dict[str, Any] = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.family in ("encdec", "audio"):
+        specs["frames"] = sds((B, cfg.frontend_len, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        specs["patches"] = sds((B, cfg.frontend_len, cfg.d_model), cfg.dtype)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell) -> tuple[Any, Any]:
+    """(cache_specs, token_specs) for a serve_step at context ``cell.seq_len``."""
+    B, S = cell.global_batch, cell.seq_len
+    model = get_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_decode_cache(cfg, B, S)
+    )
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def make_batch(cfg: ModelConfig, key, batch: int, seq: int) -> dict[str, Any]:
+    """A real random batch (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+    }
+    out["labels"] = out["tokens"]
+    if cfg.family in ("encdec", "audio"):
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.frontend_len, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype)
+    if cfg.family == "vlm":
+        out["patches"] = jax.random.normal(
+            k3, (batch, cfg.frontend_len, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype)
+    return out

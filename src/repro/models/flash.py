@@ -1,0 +1,251 @@
+"""Blocked (flash) attention in pure JAX with a recompute-based custom VJP.
+
+XLA does not tile attention by itself: materializing (B,H,Sq,Sk) scores at
+seq 4k–32k is tens-to-hundreds of GB. This module computes attention with
+online softmax over KV blocks (forward) and recomputes score tiles in the
+backward pass (saving only q, k, v, o, lse) — the standard flash-attention
+memory profile, expressed in jnp so it runs on any backend and serves as the
+oracle for the Pallas TPU kernel in ``repro.kernels``.
+
+Layout is (B, H, Sq, D): the head dim stays whole so tensor-parallel head
+sharding propagates into the score tiles (a folded-GQA layout would leave
+MQA's single KV head unshardable). GQA grouping happens per tile via a
+(KV, G) reshape — K/V are never repeated per head.
+
+Causal FLOP skipping: queries are processed in up to ``n_strips`` python-level
+strips; strip s only scans KV blocks up to its own diagonal, bounding the
+causal overcompute at ~1/(2*n_strips) (12.5% for 8 strips). The Pallas TPU
+kernel does exact diagonal skipping; this is the portable fallback.
+
+Supports sliding windows (mixtral), query offsets (chunked prefill), padded
+KV (kv_len bound), and distinct v head dim (MLA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+DEFAULT_BLOCK_Q = 1024
+DEFAULT_BLOCK_K = 1024
+DEFAULT_STRIPS = 8
+
+
+class MaskSpec(NamedTuple):
+    causal: bool = True
+    window: int | None = None   # sliding-window width
+    q_offset: int = 0           # absolute position of query row 0 minus key 0
+    kv_len: int | None = None   # valid KV length (rest is padding)
+
+
+def _block_mask(qpos: jax.Array, ki: jax.Array, spec: MaskSpec) -> jax.Array:
+    m = jnp.ones((qpos.shape[0], ki.shape[0]), bool)
+    if spec.causal:
+        m &= ki[None, :] <= (qpos[:, None] + spec.q_offset)
+    if spec.window is not None:
+        m &= ki[None, :] > (qpos[:, None] + spec.q_offset - spec.window)
+    if spec.kv_len is not None:
+        m &= (ki < spec.kv_len)[None, :]
+    return m
+
+
+def _tile_scores(q, ks, spec, scale, qpos, ki):
+    """q: (B,KV,G,bq,D)  ks: (B,KV,bk,D) -> masked fp32 (B,KV,G,bq,bk)."""
+    s = jnp.einsum("bkgqd,bksd->bkgqs", q, ks).astype(jnp.float32) * scale
+    return jnp.where(_block_mask(qpos, ki, spec)[None, None, None], s, NEG_INF)
+
+
+def _strip_fwd(q, k, v, spec: MaskSpec, scale, block_k: int, kb0: int,
+               nkb: int, qpos: jax.Array):
+    """One query strip. q: (B,KV,G,R,D); scans nkb KV blocks. -> (o, lse)."""
+    B, KV, G, R, D = q.shape
+    Dv = v.shape[3]
+
+    def body(carry, kb):
+        acc, m_run, l_run = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, kb * block_k, block_k, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(v, kb * block_k, block_k, axis=2)
+        ki = kb * block_k + jnp.arange(block_k)
+        s = _tile_scores(q, ks, spec, scale, qpos, ki)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bksv->bkgqv", p.astype(v.dtype), vs
+        ).astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, KV, G, R, Dv), jnp.float32)
+    m0 = jnp.full((B, KV, G, R), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, R), jnp.float32)
+    (acc, m_f, l_f), _ = jax.lax.scan(
+        body, (acc0, m0, l0), kb0 + jnp.arange(nkb)
+    )
+    l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
+    o = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m_f + jnp.log(l_safe)
+    return o, lse
+
+
+def _strip_plan(Sq, Sk, spec: MaskSpec, block_k: int, n_strips: int):
+    """[(row_start, rows, kb0, nkb)] — causal strips scan only the KV blocks
+
+    between their sliding-window low edge and their diagonal.
+    """
+    n = min(n_strips, Sq) if spec.causal else 1
+    while Sq % n:
+        n -= 1
+    rows = Sq // n
+    plan = []
+    for s in range(n):
+        if spec.causal:
+            hi = max(min((s + 1) * rows + spec.q_offset, Sk), 1)
+        else:
+            hi = Sk
+        lo = 0
+        if spec.causal and spec.window is not None:
+            lo = max(s * rows + spec.q_offset - spec.window + 1, 0)
+        kb0 = lo // block_k
+        nkb = max(-(-hi // block_k) - kb0, 1)
+        plan.append((s * rows, rows, kb0, nkb))
+    return plan
+
+
+def _fwd_all(q, k, v, spec: MaskSpec, scale, block_q, block_k, n_strips):
+    B, KV, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    os, lses = [], []
+    for (start, rows, kb0, nkb) in _strip_plan(Sq, Sk, spec, block_k, n_strips):
+        qs = jax.lax.slice_in_dim(q, start, start + rows, axis=3)
+        qpos = start + jnp.arange(rows)
+        o_s, lse_s = _strip_fwd(qs, k, v, spec, scale, block_k, kb0, nkb, qpos)
+        os.append(o_s)
+        lses.append(lse_s)
+    return jnp.concatenate(os, axis=3), jnp.concatenate(lses, axis=3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_core(q, k, v, spec: MaskSpec, scale, block_q, block_k, n_strips):
+    o, _ = _fwd_all(q, k, v, spec, scale, block_q, block_k, n_strips)
+    return o
+
+
+def _flash_fwd(q, k, v, spec, scale, block_q, block_k, n_strips):
+    o, lse = _fwd_all(q, k, v, spec, scale, block_q, block_k, n_strips)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(spec, scale, block_q, block_k, n_strips, res, do):
+    """Recompute score tiles strip-by-strip; saves only (q,k,v,o,lse)."""
+    q, k, v, o, lse = res
+    B, KV, G, Sq, D = q.shape
+    Sk, Dv = k.shape[2], v.shape[3]
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    dq = jnp.zeros(q.shape, jnp.float32)
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+
+    for (start, rows, kb0, nkb) in _strip_plan(Sq, Sk, spec, block_k, n_strips):
+        qs = jax.lax.slice_in_dim(q, start, start + rows, axis=3)
+        dos = jax.lax.slice_in_dim(do, start, start + rows, axis=3)
+        lses = jax.lax.slice_in_dim(lse, start, start + rows, axis=3)
+        deltas = jax.lax.slice_in_dim(delta, start, start + rows, axis=3)
+        qpos = start + jnp.arange(rows)
+
+        def body(dq_acc, kb, qs=qs, dos=dos, lses=lses, deltas=deltas, qpos=qpos):
+            ks = jax.lax.dynamic_slice_in_dim(k, kb * block_k, block_k, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, kb * block_k, block_k, axis=2)
+            ki = kb * block_k + jnp.arange(block_k)
+            s = _tile_scores(qs, ks, spec, scale, qpos, ki)
+            p = jnp.exp(s - lses[..., None])  # (B,KV,G,rows,bk)
+            dp = jnp.einsum(
+                "bkgqv,bksv->bkgqs", dos.astype(jnp.float32),
+                vs.astype(jnp.float32),
+            )
+            ds = p * (dp - deltas[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqs,bksd->bkgqd", ds, ks.astype(jnp.float32)
+            )
+            dk_b = jnp.einsum("bkgqs,bkgqd->bksd", ds, qs.astype(jnp.float32))
+            dv_b = jnp.einsum("bkgqs,bkgqv->bksv", p, dos.astype(jnp.float32))
+            return dq_acc, (dk_b, dv_b)
+
+        dq0 = jnp.zeros((B, KV, G, rows, D), jnp.float32)
+        dq_s, (dk_t, dv_t) = jax.lax.scan(body, dq0, kb0 + jnp.arange(nkb))
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq_s, start, axis=3)
+        lo, hi = kb0 * block_k, (kb0 + nkb) * block_k
+        dk_flat = jnp.moveaxis(dk_t, 0, 2).reshape(B, KV, hi - lo, D)
+        dv_flat = jnp.moveaxis(dv_t, 0, 2).reshape(B, KV, hi - lo, Dv)
+        dk = dk.at[:, :, lo:hi].add(dk_flat)
+        dv = dv.at[:, :, lo:hi].add(dv_flat)
+
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,           # (B, Sq, H, D)
+    k: jax.Array,           # (B, Sk, KV, D)
+    v: jax.Array,           # (B, Sk, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    n_strips: int = DEFAULT_STRIPS,
+) -> jax.Array:
+    """GQA flash attention; returns (B, Sq, H, Dv)."""
+    B, Sq, H, D = q.shape
+    Sk, KV, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    qT = q.transpose(0, 2, 1, 3).reshape(B, KV, G, Sq, D)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+
+    block_k = min(block_k, Sk)
+    kv_len = None
+    if Sk % block_k:
+        pad = block_k - Sk % block_k
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_len = Sk
+
+    spec = MaskSpec(causal=causal, window=window, q_offset=q_offset,
+                    kv_len=kv_len)
+    o = _flash_core(qT, kT, vT, spec, scale, block_q, block_k, n_strips)
+    return o.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                        scale=None):
+    """Dense oracle with identical semantics (small shapes only)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    if H != KV:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    ki = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    s = jnp.where(m[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhv->bqhv", p.astype(v.dtype), v)

@@ -1,0 +1,236 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (full/SWA/decode/cross), SwiGLU MLP.
+
+Pure-functional: params are nested dicts of arrays; every function is
+jit/scan/vmap-safe. Tensors are annotated with logical axis names resolved by
+:mod:`repro.models.sharding`.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.flash import flash_attention
+from repro.models.sharding import constrain
+
+Params = dict[str, Any]
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- RMSNorm ---------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- rotary ------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # positions: (..., S) -> (..., S, 1, 1) broadcast against (half,)
+    angles = positions.astype(jnp.float32)[..., None, None] * freqs  # (...,S,1,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1 * cos.astype(x.dtype) - x2 * sin.astype(x.dtype),
+            x2 * cos.astype(x.dtype) + x1 * sin.astype(x.dtype),
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+# -- GQA attention ----------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, H * Dh), cfg.dtype),
+        "wk": _init(ks[1], (d, KV * Dh), cfg.dtype),
+        "wv": _init(ks[2], (d, KV * Dh), cfg.dtype),
+        "wo": _init(ks[3], (H * Dh, d), cfg.dtype),
+    }
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,Sq,H,Dh)  k,v: (B,Sk,KV,Dh)  mask: broadcastable (B,1,Sq,Sk)."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(Dh)
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def causal_mask(Sq: int, Sk: int, *, window: int | None = None,
+                offset: int = 0) -> jax.Array:
+    """(1,1,Sq,Sk) causal (optionally banded) mask. ``offset`` = Sk - Sq."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    ki = jnp.arange(Sk)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m[None, None]
+
+
+def gqa_attention(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    kv: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Self- (kv=None) or cross- (kv = encoder output) attention."""
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ p["wq"], H, Dh)
+    q = rope(q, positions, cfg.rope_theta)
+    if kv is None:
+        k = _split_heads(x @ p["wk"], KV, Dh)
+        v = _split_heads(x @ p["wv"], KV, Dh)
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k = _split_heads(kv @ p["wk"], KV, Dh)
+        v = _split_heads(kv @ p["wv"], KV, Dh)
+        if kv_positions is not None:
+            k = rope(k, kv_positions, cfg.rope_theta)
+        causal = False
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    if mask is None:
+        out = flash_attention(
+            q, k, v,
+            causal=causal,
+            window=cfg.sliding_window if kv is None else None,
+        )
+    else:
+        out = _sdpa(q, k, v, mask, cfg)
+    out = constrain(out, "batch", None, "heads", None)
+    return out.reshape(B, S, H * Dh) @ p["wo"]
+
+
+def gqa_decode_step(
+    p: Params,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B,1,d); cache: (B,S_cache,KV,Dh); pos: scalar.
+
+    For SWA the cache is a ring buffer of width ``sliding_window`` indexed by
+    ``pos % window``; otherwise the cache holds the full context and new KV is
+    written at ``pos``.
+    """
+    B = x.shape[0]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    S_cache = cache_k.shape[1]
+    q = _split_heads(x @ p["wq"], H, Dh)
+    q = rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    k_new = _split_heads(x @ p["wk"], KV, Dh)
+    k_new = rope(k_new, jnp.full((B, 1), pos), cfg.rope_theta)
+    v_new = _split_heads(x @ p["wv"], KV, Dh)
+
+    slot = pos % S_cache if cfg.sliding_window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    cache_k = constrain(cache_k, "batch", "kv_len", "kv_heads", None)
+    cache_v = constrain(cache_v, "batch", "kv_len", "kv_heads", None)
+
+    idx = jnp.arange(S_cache)
+    if cfg.sliding_window:
+        valid = (idx <= slot) | (pos >= S_cache)  # ring: all valid once wrapped
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, :]
+    out = _sdpa(q, cache_k, cache_v, mask, cfg)
+    return out.reshape(B, 1, H * Dh) @ p["wo"], cache_k, cache_v
+
+
+# -- SwiGLU MLP -----------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init(ks[0], (d, ff), cfg.dtype),
+        "w_up": _init(ks[1], (d, ff), cfg.dtype),
+        "w_down": _init(ks[2], (ff, d), cfg.dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["w_down"]
+
+
+# -- embedding / head ------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 2048) -> int:
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def embed_init(key, cfg: ModelConfig) -> Params:
+    V = padded_vocab(cfg)
+    p = {"embedding": _init(key, (V, cfg.d_model), cfg.dtype, scale=1.0)}
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    e = p["embedding"]
+    e = constrain(e, "vocab", None)
+    out = jnp.take(e, tokens, axis=0)
+    return constrain(out, "batch", None, None)
+
+
+def logits(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B,S,d) -> (B,S,V_padded), vocab-sharded; padded region masked."""
+    e = p["embedding"]
+    out = (x @ e.T.astype(x.dtype)).astype(jnp.float32)
+    V = padded_vocab(cfg)
+    if V != cfg.vocab_size:
+        pad_mask = jnp.arange(V) >= cfg.vocab_size
+        out = jnp.where(pad_mask[None, None, :], NEG_INF, out)
+    return constrain(out, "batch", None, "vocab")
+
+
+def cross_entropy(logit: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; logit (B,S,V) fp32, labels (B,S) int32."""
+    lse = jax.nn.logsumexp(logit, axis=-1)
+    picked = jnp.take_along_axis(logit, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)

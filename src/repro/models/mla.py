@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Training/prefill uses the decompressed formulation; decode uses the absorbed
+formulation whose KV cache is the compressed latent (kv_lora_rank +
+qk_rope_head_dim per token) — the reason MLA's cache is small and hot, and why
+DOLMA's placement policy keeps it local while demoting routed experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.flash import flash_attention
+from repro.models.layers import NEG_INF, Params, _init, rmsnorm, rope
+from repro.models.sharding import constrain
+
+
+def mla_init(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rdim, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": _init(ks[0], (d, qr), cfg.dtype),
+        "q_ln": {"scale": jnp.ones((qr,), cfg.dtype)},
+        "wq_b": _init(ks[1], (qr, H * (nope + rdim)), cfg.dtype),
+        "wkv_a": _init(ks[2], (d, kr + rdim), cfg.dtype),
+        "kv_ln": {"scale": jnp.ones((kr,), cfg.dtype)},
+        "wkv_b": _init(ks[3], (kr, H * (nope + vh)), cfg.dtype),
+        "wo": _init(ks[4], (H * vh, d), cfg.dtype, scale=1.0 / np.sqrt(H * vh)),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm(p["q_ln"], x @ p["wq_a"])
+    q = (cq @ p["wq_b"]).reshape(B, S, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, x, cfg, positions):
+    kr, rdim = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv = x @ p["wkv_a"]  # (B,S,kr+rdim)
+    c_kv = rmsnorm(p["kv_ln"], ckv[..., :kr])
+    k_rope = rope(ckv[..., None, kr:], positions, cfg.rope_theta)[:, :, 0]  # (B,S,rdim)
+    return c_kv, k_rope
+
+
+def mla_attention(
+    p: Params, x: jax.Array, cfg: ModelConfig, *, positions: jax.Array
+) -> jax.Array:
+    """Decompressed MLA for train/prefill (full causal attention)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rdim, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(p, x, cfg, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, nope + vh)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,nope+rdim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rdim))], axis=-1
+    )
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    out = flash_attention(q, k, v, causal=True, scale=1.0 / np.sqrt(nope + rdim))
+    out = constrain(out, "batch", None, "heads", None)
+    return out.reshape(B, S, H * vh) @ p["wo"]
+
+
+def mla_decode_step(
+    p: Params,
+    x: jax.Array,
+    cache_c: jax.Array,   # (B, S_max, kv_lora_rank)
+    cache_kr: jax.Array,  # (B, S_max, qk_rope_head_dim)
+    pos: jax.Array,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed one-token decode against the compressed-latent cache."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rdim, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    S_max = cache_c.shape[1]
+
+    positions = jnp.full((B, 1), pos)
+    q_nope, q_rope = _project_q(p, x, cfg, positions)  # (B,1,H,*)
+    c_new, kr_new = _project_kv_latent(p, x, cfg, positions)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_new, pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_new, pos, axis=1)
+    cache_c = constrain(cache_c, "batch", "kv_len", None)
+    cache_kr = constrain(cache_kr, "batch", "kv_len", None)
+
+    wkv_b = p["wkv_b"].reshape(kr, H, nope + vh)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+
+    # absorb W_uk into q: score directly against the latent cache
+    q_c = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)  # (B,1,H,kr)
+    scale = 1.0 / np.sqrt(nope + rdim)
+    scores = (
+        jnp.einsum("bqhl,bsl->bhqs", q_c, cache_c)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_kr)
+    ).astype(jnp.float32) * scale
+    valid = (jnp.arange(S_max) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, cache_c)  # (B,1,H,kr)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)       # (B,1,H,vh)
+    out = out.reshape(B, 1, H * vh) @ p["wo"]
+    return out, cache_c, cache_kr

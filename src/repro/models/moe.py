@@ -1,0 +1,261 @@
+"""Mixture-of-Experts FFN with capacity-based grouped dispatch.
+
+Dispatch is *per group* (a group = one batch row in train/prefill, one data
+shard's tokens in decode) so the expert sort never crosses the batch-sharded
+axis — no global sort collectives. Experts shard over the 'model' mesh axis
+(``expert_sharding="expert"``, deepseek: 256/16 = 16 per device) or replicate
+with tensor-parallel expert hidden (``"tensor"``, mixtral: 8 experts < 16-way
+axis).
+
+From the DOLMA perspective expert weights are the canonical remote object:
+large, cold (top-k of E per token), write-once-per-step — the placement
+policy demotes them first (asserted in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _init, mlp, mlp_init
+from repro.models.sharding import constrain
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, E, ffe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, E), jnp.float32),
+        "w_gate": _init(ks[1], (E, d, ffe), cfg.dtype),
+        "w_up": _init(ks[2], (E, d, ffe), cfg.dtype),
+        "w_down": _init(ks[3], (E, ffe, d), cfg.dtype, scale=1.0 / np.sqrt(ffe)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=cfg.n_shared_experts * ffe)
+    return p
+
+
+def _expert_weight_names(cfg: ModelConfig):
+    if cfg.expert_sharding == "expert":
+        return ("expert", None, None), ("expert", None, None)
+    return ("expert", None, "ff"), ("expert", "ff", None)  # tensor-parallel
+
+
+def moe_ffn(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    groups: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output, load_balance_aux_loss). x: (B, S, d).
+
+    When a mesh with a >1 'model' axis is active and experts divide it, the
+    expert-parallel shard_map path is used: dispatch/combine run locally per
+    expert shard (tokens are replicated across 'model') with a single combine
+    psum per layer — instead of letting SPMD materialize cross-shard gathers
+    and scatter-adds (EXPERIMENTS.md §Perf, deepseek cell).
+    """
+    from repro.models.sharding import current_mesh
+
+    mesh = current_mesh()
+    if (
+        mesh is not None
+        and cfg.expert_sharding == "expert"
+        and "model" in mesh.shape
+        and mesh.shape["model"] > 1
+        and cfg.n_experts % mesh.shape["model"] == 0
+    ):
+        return _moe_ffn_ep(p, x, cfg, mesh, groups=groups)
+    return _moe_ffn_dense(p, x, cfg, groups=groups)
+
+
+def _moe_ffn_dense(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    groups: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    G = groups if groups is not None else B
+    assert (B * S) % G == 0, f"tokens {B*S} not divisible by groups {G}"
+    T = (B * S) // G  # tokens per dispatch group
+    xt = x.reshape(G, T, d)
+
+    gate_logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)  # (G,T,E)
+    top_p, top_i = jax.lax.top_k(probs, k)  # (G,T,k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch/Mixtral style); counts via scatter-add
+    # (a one-hot would materialize a (tokens, k, E) f32 tensor per layer)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    n_tok = probs.shape[0] * probs.shape[1]
+    ce = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0 / n_tok)
+    aux = E * jnp.sum(me * ce) / k
+
+    cap = max(int(np.ceil(T * k / E * cf)), 1)
+
+    # --- per-group sorted dispatch (no cross-group comms) ---
+    flat_e = top_i.reshape(G, T * k)
+    flat_w = top_p.reshape(G, T * k)
+    flat_tok = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k)).reshape(T * k)
+    flat_tok = jnp.broadcast_to(flat_tok, (G, T * k))
+
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+
+    # position of each slot within its expert's contiguous run
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)  # (G,E)
+    pos = jnp.arange(T * k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    valid = pos < cap
+    dest = se * cap + jnp.where(valid, pos, 0)  # (G, T*k) in [0, E*cap)
+
+    # gather tokens into (G, E, cap, d)
+    src = jnp.take_along_axis(xt, stok[..., None], axis=1)  # (G,T*k,d)
+    src = jnp.where(valid[..., None], src, 0)
+    xg = jnp.zeros((G, E * cap, d), x.dtype)
+    xg = jax.vmap(lambda buf, idx, val: buf.at[idx].add(val))(xg, dest, src)
+    xg = xg.reshape(G, E, cap, d)
+    xg = constrain(xg, "batch", "expert", None, None)
+
+    # expert computation
+    wn1, wn2 = _expert_weight_names(cfg)
+    wg = constrain(p["w_gate"], *wn1)
+    wu = constrain(p["w_up"], *wn1)
+    wd = constrain(p["w_down"], *wn2)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xg, wg))
+    h = h * jnp.einsum("gecd,edf->gecf", xg, wu)
+    h = constrain(h, "batch", "expert", None, "expert_ff")
+    yg = jnp.einsum("gecf,efd->gecd", h, wd)  # (G,E,cap,d)
+    yg = constrain(yg, "batch", "expert", None, None)
+
+    # combine back to tokens
+    yflat = yg.reshape(G, E * cap, d)
+    gathered = jnp.take_along_axis(yflat, dest[..., None], axis=1)  # (G,T*k,d)
+    gathered = jnp.where(valid[..., None], gathered, 0) * sw[..., None].astype(x.dtype)
+    out = jnp.zeros((G, T, d), x.dtype)
+    out = jax.vmap(lambda buf, idx, val: buf.at[idx].add(val))(out, stok, gathered)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel dispatch (shard_map over the 'model' axis)
+# ---------------------------------------------------------------------------
+
+def _dispatch_local(xt, li, lw, E_loc, cap, w_gate, w_up, w_down, dtype,
+                    axis: str | None = None):
+    """Capacity dispatch among E_loc local experts (per-shard; no collectives
+    besides the explicit pvary). xt: (G,T,d); li: (G,T*k) local expert ids
+    with E_loc = non-local sentinel; lw: (G,T*k) combine weights (0 for
+    non-local). Returns (G,T,d) partial sums.
+
+    ``axis``: inside shard_map, xt (replicated over the expert axis) is
+    explicitly ``pvary``'d here. This does two things: (1) it works around
+    shard_map autodiff dropping cross-shard cotangents through gathers whose
+    operand is unvarying but whose indices vary, and (2) pvary's transpose IS
+    the dx psum — placed at token granularity by construction, instead of
+    XLA hoisting an all-reduce to the k-times-larger slot-level cotangent.
+    """
+    if axis is not None and axis not in jax.typeof(xt).vma:
+        xt = jax.lax.pvary(xt, axis)
+    G, T, d = xt.shape
+    k_slots = li.shape[1]
+    flat_tok = jnp.broadcast_to(
+        jnp.arange(T)[:, None], (T, k_slots // T)
+    ).reshape(k_slots)
+    flat_tok = jnp.broadcast_to(flat_tok, (G, k_slots))
+
+    order = jnp.argsort(li, axis=-1)
+    se = jnp.take_along_axis(li, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sw = jnp.take_along_axis(lw, order, axis=-1)
+
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E_loc)))(se)
+    pos = jnp.arange(k_slots)[None, :] - jnp.take_along_axis(
+        starts, jnp.minimum(se, E_loc - 1), axis=-1
+    )
+    valid = (se < E_loc) & (pos < cap) & (pos >= 0)
+    dest = jnp.where(valid, jnp.minimum(se, E_loc - 1) * cap + pos, 0)
+
+    src = jnp.take_along_axis(xt, stok[..., None], axis=1)
+    src = jnp.where(valid[..., None], src, 0)
+    xg = jnp.zeros((G, E_loc * cap, d), dtype)
+    xg = jax.vmap(lambda buf, idx, val: buf.at[idx].add(val))(xg, dest, src)
+    xg = xg.reshape(G, E_loc, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xg, w_gate))
+    h = h * jnp.einsum("gecd,edf->gecf", xg, w_up)
+    yg = jnp.einsum("gecf,efd->gecd", h, w_down).reshape(G, E_loc * cap, d)
+
+    gathered = jnp.take_along_axis(yg, dest[..., None], axis=1)
+    gathered = jnp.where(valid[..., None], gathered, 0) * sw[..., None].astype(dtype)
+    out = jnp.zeros((G, T, d), dtype)
+    out = jax.vmap(lambda buf, idx, val: buf.at[idx].add(val))(out, stok, gathered)
+    return out
+
+
+def _moe_ffn_ep(
+    p: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mesh,
+    *,
+    groups: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    from repro.models.sharding import resolve_spec
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
+    n_shards = mesh.shape["model"]
+    E_loc = E // n_shards
+
+    # routing is computed replicated (tiny dot); aux loss comes from it
+    gate_logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = (top_p / jnp.sum(top_p, axis=-1, keepdims=True)).astype(jnp.float32)
+    me = jnp.mean(probs, axis=(0, 1))
+    n_tok = probs.shape[0] * probs.shape[1]
+    ce = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0 / n_tok)
+    aux = E * jnp.sum(me * ce) / k
+
+    T = S  # per-row groups; dispatch below flattens (B, S)
+    cap = max(int(np.ceil(T * k / E * cf)), 1)
+
+    x_spec = resolve_spec(x.shape, ("batch", None, None), mesh)
+    r_spec = resolve_spec(top_i.shape, ("batch", None, None), mesh)
+    w1_spec = P("model", None, None)
+    w2_spec = P("model", None, None)
+
+    def body(x_l, topi_l, topp_l, wg_l, wu_l, wd_l):
+        shard = jax.lax.axis_index("model")
+        lo = shard * E_loc
+        local = (topi_l >= lo) & (topi_l < lo + E_loc)
+        li = jnp.where(local, topi_l - lo, E_loc).astype(jnp.int32)
+        lw = jnp.where(local, topp_l, 0.0)
+        Bl = x_l.shape[0]
+        part = _dispatch_local(x_l, li.reshape(Bl, -1), lw.reshape(Bl, -1),
+                               E_loc, cap, wg_l, wu_l, wd_l, x_l.dtype,
+                               axis="model")
+        return jax.lax.psum(part, "model")
+
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, r_spec, r_spec, w1_spec, w1_spec, w2_spec),
+        out_specs=x_spec,
+    )(x, top_i, top_p, p["w_gate"], p["w_up"], p["w_down"])
+
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x)
+    return out, aux

@@ -1,0 +1,230 @@
+"""Mamba2 blocks via SSD (state-space duality), chunked formulation.
+
+Per head h (headdim P, state N):
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * B_t ⊗ x_t
+    y_t = C_t · h_t + D_h x_t
+
+The chunked algorithm (arXiv:2405.21060 §6) splits the sequence into chunks
+of Q tokens: a quadratic *intra-chunk* term (plays the role of attention), a
+chunk-state construction, an O(L/Q) *inter-chunk* recurrence (lax.scan), and
+an inter->intra broadcast. Everything is vectorized over chunks except the
+tiny carry scan. Exponentials are computed in fp32.
+
+Decode keeps O(1) state: (conv ring buffer, SSM state (B,H,P,N)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _init, rmsnorm
+from repro.models.sharding import constrain
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, g, n, hN = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    w = cfg.ssm_conv_width
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * g * n + hN), cfg.dtype),
+        "conv_w": _init(ks[1], (w, conv_ch), cfg.dtype, scale=1.0 / np.sqrt(w)),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "A_log": jnp.zeros((hN,), jnp.float32),
+        "D": jnp.ones((hN,), jnp.float32),
+        "dt_bias": jnp.zeros((hN,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), cfg.dtype)},
+        "out_proj": _init(ks[3], (di, d), cfg.dtype),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    di, g, n, hN = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -hN:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Depthwise causal conv over (B, L, C)."""
+    w = cfg.ssm_conv_width
+    C = xbc.shape[-1]
+    kernel = p["conv_w"].reshape(w, 1, C)
+    out = jax.lax.conv_general_dilated(
+        xbc,
+        kernel.astype(xbc.dtype),
+        window_strides=(1,),
+        padding=[(w - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(out.dtype))
+
+
+def _ssd_scan(xh, Bm, Cm, dt, A, cfg: ModelConfig, init_state=None):
+    """Chunked SSD. xh: (B,L,H,P); Bm,Cm: (B,L,G,N); dt: (B,L,H) fp32.
+
+    Returns y: (B,L,H,P) and final state (B,H,P,N).
+    """
+    Bsz, L, H, P = xh.shape
+    G = Bm.shape[2]
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
+    nc = L // Q
+    rep = H // G
+
+    def chunked(t, extra):  # (B,L,...) -> (B,nc,Q,...)
+        return t.reshape(Bsz, nc, Q, *extra)
+
+    xc = chunked(xh, (H, P))
+    Bc = jnp.repeat(chunked(Bm, (G, cfg.ssm_state)), rep, axis=3)  # (B,nc,Q,H,N)
+    Cc = jnp.repeat(chunked(Cm, (G, cfg.ssm_state)), rep, axis=3)
+    dtc = chunked(dt, (H,))  # fp32
+
+    dA = dtc * A  # (B,nc,Q,H) fp32, A negative
+    cum = jnp.cumsum(dA, axis=2)  # inclusive
+    total = cum[:, :, -1]  # (B,nc,H)
+
+    # intra-chunk quadratic term
+    Lmat = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,q,k,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(mask, Lmat, 0.0) * dtc[:, :, None, :, :]  # decay*dt_k
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores * Lmat,
+                         xc.astype(jnp.float32))
+
+    # chunk-local states (contribution of each chunk to the carry)
+    decay_out = jnp.exp(total[:, :, None] - cum)  # (B,nc,Q,H)
+    S_local = jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchpn",
+        decay_out * dtc,
+        Bc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence (tiny scan over nc)
+    lam = jnp.exp(total)  # (B,nc,H)
+    S0 = (
+        jnp.zeros((Bsz, H, P, cfg.ssm_state), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(S_prev, inp):
+        lam_c, S_loc = inp
+        S_new = lam_c[:, :, None, None] * S_prev + S_loc
+        return S_new, S_prev  # emit the state *entering* this chunk
+
+    lam_t = jnp.moveaxis(lam, 1, 0)        # (nc,B,H)
+    Sloc_t = jnp.moveaxis(S_local, 1, 0)   # (nc,B,H,P,N)
+    S_final, S_prev_t = jax.lax.scan(step, S0, (lam_t, Sloc_t))
+    S_prev = jnp.moveaxis(S_prev_t, 0, 1)  # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    decay_in = jnp.exp(cum)  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn->bcqhp", Cc.astype(jnp.float32), S_prev
+    ) * decay_in[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y.astype(xh.dtype), S_final
+
+
+def ssm_block(
+    p: Params, x: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Full Mamba2 block (no residual/norm — the caller wraps)."""
+    Bsz, L, _ = x.shape
+    di, g, n, hN, P = (
+        cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim,
+    )
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc = _causal_conv(p, xbc, cfg)
+    xs = xbc[..., :di].reshape(Bsz, L, hN, P)
+    Bm = xbc[..., di : di + g * n].reshape(Bsz, L, g, n)
+    Cm = xbc[..., di + g * n :].reshape(Bsz, L, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    xs = constrain(xs, "batch", None, "heads", None)
+    y, _ = _ssd_scan(xs, Bm, Cm, dt, A, cfg)
+    y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(Bsz, L, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+# -- decode -----------------------------------------------------------------
+
+def ssm_decode_init(cfg: ModelConfig, batch: int):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), cfg.dtype),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def ssm_decode_step(
+    p: Params, x: jax.Array, cache: dict, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """One-token step. x: (B,1,d). O(1) in context length."""
+    Bsz = x.shape[0]
+    di, g, n, hN, P = (
+        cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim,
+    )
+    z, xbc_new, dt_raw = _split_proj(p, x, cfg)  # (B,1,*)
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B,w,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None].astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    xs = xbc[..., :di].reshape(Bsz, hN, P)
+    Bm = xbc[..., di : di + g * n].reshape(Bsz, g, n)
+    Cm = xbc[..., di + g * n :].reshape(Bsz, g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    rep = hN // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)  # (B,H)
+    S = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, S) + p["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "state": S}
+
+
+def ssd_reference_recurrent(xh, Bm, Cm, dt, A):
+    """O(L) recurrent oracle for tests. Same shapes as _ssd_scan, fp32."""
+    Bsz, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = xh.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(S, t):
+        decay = jnp.exp(dtf[:, t] * A)  # (B,H)
+        S = S * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtf[:, t], Bh[:, t], xf[:, t]
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], S)
+        return S, y
+
+    S0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1)  # (B,L,H,P)

@@ -1,0 +1,469 @@
+"""Unified model assembly for all assigned families.
+
+Public API (uniform across dense / moe / ssm / hybrid / vlm; encdec lives in
+:mod:`repro.models.encdec` with the same signatures):
+
+  init_params(key, cfg)                    -> params pytree
+  forward(params, batch, cfg, ...)         -> (logits, aux)
+  loss_fn(params, batch, cfg, ...)         -> (loss, metrics)
+  init_decode_cache(cfg, batch, max_len)   -> cache pytree
+  decode_step(params, cache, tokens, cfg)  -> (logits, cache)
+
+Layers are *stacked* (leading dim = n_layers) and driven by
+:func:`repro.core.tiering.prefetch_scan` — the compiled form of DOLMA's
+dual-buffer: layer k+1's weights are fetched (device copy / all-gather,
+depending on their tier/sharding) while layer k computes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tiering import blocked_remat_scan, prefetch_scan
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.sharding import constrain
+
+Params = dict[str, Any]
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=REMAT_POLICIES[remat])
+
+
+# ---------------------------------------------------------------------------
+# per-family layer blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+    }
+    if cfg.attention == "mla":
+        p["attn"] = MLA.mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attention_init(k1, cfg)
+    return p
+
+
+def _dense_layer_init(key, cfg: ModelConfig) -> Params:
+    p = _attn_block_init(key, cfg)
+    p["mlp"] = L.mlp_init(jax.random.fold_in(key, 7), cfg)
+    return p
+
+
+def _moe_layer_init(key, cfg: ModelConfig) -> Params:
+    p = _attn_block_init(key, cfg)
+    p["moe"] = MOE.moe_init(jax.random.fold_in(key, 7), cfg)
+    return p
+
+
+def _ssm_layer_init(key, cfg: ModelConfig) -> Params:
+    return {
+        "ln": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "ssm": SSM.ssm_init(key, cfg),
+    }
+
+
+def _attention_part(p, x, cfg, positions):
+    h = L.rmsnorm(p["ln1"], x)
+    if cfg.attention == "mla":
+        return x + MLA.mla_attention(p["attn"], h, cfg, positions=positions)
+    return x + L.gqa_attention(p["attn"], h, cfg, positions=positions)
+
+
+def _dense_layer(p, x, cfg, positions):
+    x = _attention_part(p, x, cfg, positions)
+    x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x))
+    return constrain(x, "batch", "seq_sp", None)
+
+
+def _moe_layer(p, x, cfg, positions, groups=None):
+    x = _attention_part(p, x, cfg, positions)
+    out, aux = MOE.moe_ffn(p["moe"], L.rmsnorm(p["ln2"], x), cfg, groups=groups)
+    return constrain(x + out, "batch", "seq_sp", None), aux
+
+
+def _ssm_layer(p, x, cfg):
+    x = x + SSM.ssm_block(p["ssm"], L.rmsnorm(p["ln"], x), cfg)
+    return constrain(x, "batch", "seq_sp", None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": L.embed_init(keys[0], cfg),
+                 "ln_f": L.rmsnorm_init(cfg.d_model, cfg.dtype)}
+
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = _stacked(lambda k: _dense_layer_init(k, cfg), keys[1], cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.first_k_dense:
+            p["dense_layers"] = _stacked(
+                lambda k: _dense_layer_init(k, cfg), keys[1], cfg.first_k_dense
+            )
+        p["layers"] = _stacked(lambda k: _moe_layer_init(k, cfg), keys[2], n_moe)
+    elif cfg.family == "ssm":
+        p["layers"] = _stacked(lambda k: _ssm_layer_init(k, cfg), keys[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stacked(lambda k: _ssm_layer_init(k, cfg), keys[1], cfg.n_layers)
+        p["shared_attn"] = _dense_layer_init(keys[3], cfg)
+    else:
+        raise ValueError(f"init_params: family {cfg.family} handled in encdec.py")
+
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": L._init(keys[4], (2 * cfg.d_model, cfg.d_model), cfg.dtype),
+            "layer": _dense_layer_init(keys[5], cfg),
+            "ln": L.rmsnorm_init(cfg.d_model, cfg.dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token (+ frontend stub) embedding. Returns (x, positions, label_offset)."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # (B, F, d) — ViT stub
+        x = jnp.concatenate([patches, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions
+
+
+def _run_trunk(params, x, positions, cfg: ModelConfig, *, remat: str,
+               prefetch: bool, moe_groups: int | None = None):
+    """Scan the stacked layers; returns (hidden, aux_loss).
+
+    Dual-buffer note: the explicit prefetch carry (layer k+1's weights fetched
+    while layer k computes) is only used when remat is off — under remat the
+    carried gathered weights would be saved for backward for EVERY layer,
+    defeating FSDP/offload. With remat on, the fetch happens inside the remat
+    boundary and the overlap is realized by XLA's collective pipeliner /
+    latency-hiding scheduler instead (DESIGN.md §2).
+    """
+    prefetch = prefetch and remat == "none"
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def scan_layers(fn, carry, stacked, n):
+        if remat == "none":
+            return prefetch_scan(fn, carry, stacked, n_layers=n,
+                                 prefetch=prefetch)
+        # '<policy>_flat' = single-level per-layer remat: one fwd + one
+        # recompute (vs sqrt-L's two) — fewer recomputed collectives at the
+        # cost of O(L) saved carries; pick via microbatching headroom (§Perf)
+        base, _, flat = remat.partition("_")
+        return blocked_remat_scan(
+            fn, carry, stacked, n_layers=n,
+            policy=REMAT_POLICIES[base],
+            min_layers=10 ** 9 if flat == "flat" else 12,
+        )
+
+    if cfg.family in ("dense", "vlm"):
+        x = scan_layers(lambda c, p: _dense_layer(p, c, cfg, positions),
+                        x, params["layers"], cfg.n_layers)
+        return x, aux0
+
+    if cfg.family == "moe":
+        aux = aux0
+        if cfg.first_k_dense:
+            x = scan_layers(lambda c, p: _dense_layer(p, c, cfg, positions),
+                            x, params["dense_layers"], cfg.first_k_dense)
+
+        def moe_body(carry, p):
+            xx, a = carry
+            xx, aux_l = _moe_layer(p, xx, cfg, positions, groups=moe_groups)
+            return (xx, a + aux_l)
+
+        x, aux = scan_layers(moe_body, (x, aux), params["layers"],
+                             cfg.n_layers - cfg.first_k_dense)
+        return x, aux
+
+    if cfg.family == "ssm":
+        x = scan_layers(lambda c, p: _ssm_layer(p, c, cfg),
+                        x, params["layers"], cfg.n_layers)
+        return x, aux0
+
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        n_groups, tail = divmod(cfg.n_layers, k)
+        fn = lambda c, p: _ssm_layer(p, c, cfg)  # noqa: E731
+        shared_fn = _maybe_remat(
+            lambda xx: _dense_layer(params["shared_attn"], xx, cfg, positions), remat
+        )
+        for g in range(n_groups):
+            group = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(t, g * k, (g + 1) * k, axis=0),
+                params["layers"],
+            )
+            x = scan_layers(fn, x, group, k)
+            x = shared_fn(x)
+        if tail:
+            group = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(t, n_groups * k, cfg.n_layers, axis=0),
+                params["layers"],
+            )
+            x = scan_layers(fn, x, group, tail)
+        return x, aux0
+
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def forward(
+    params: Params,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    remat: str = "none",
+    prefetch: bool = True,
+    moe_groups: int | None = None,
+    return_hidden: bool = False,
+):
+    """Full-sequence forward. Returns (logits[B,S_tokens,V], aux_loss[, hidden])."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x = constrain(x, "batch", "seq_sp", None)
+    x, aux = _run_trunk(params, x, positions, cfg, remat=remat,
+                        prefetch=prefetch, moe_groups=moe_groups)
+    x = L.rmsnorm(params["ln_f"], x)
+    if cfg.family == "vlm":  # only text positions produce logits
+        x = x[:, batch["patches"].shape[1]:]
+    logits = L.logits(params["embed"], x, cfg)
+    if return_hidden:
+        return logits, aux, x
+    return logits, aux
+
+
+def loss_fn(
+    params: Params,
+    batch: dict,
+    cfg: ModelConfig,
+    *,
+    remat: str = "full",
+    prefetch: bool = True,
+    aux_weight: float = 0.01,
+    mtp_weight: float = 0.1,
+    moe_groups: int | None = None,
+) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE aux + MTP losses)."""
+    want_hidden = bool(cfg.mtp_depth and "mtp" in params)
+    out = forward(params, batch, cfg, remat=remat, prefetch=prefetch,
+                  moe_groups=moe_groups, return_hidden=want_hidden)
+    logits, aux = out[0], out[1]
+    labels = batch["labels"]
+    nll = L.cross_entropy(logits[:, :-1].astype(jnp.float32), labels[:, 1:])
+    loss = nll + aux_weight * aux
+    metrics = {"nll": nll, "aux": aux}
+
+    if want_hidden:
+        # DeepSeek-style MTP: one extra block predicting token t+2 from
+        # (trunk hidden_t, embed(token_{t+1})). Computed over the full S
+        # (shift via roll; the invalid tail is masked out of the loss) so
+        # sequence-length invariants (flash strips, sharding) hold.
+        hidden = out[2]
+        B, S, _ = hidden.shape
+        emb_next = L.embed(
+            params["embed"], jnp.roll(batch["tokens"], -1, axis=1), cfg
+        )
+        h = jnp.concatenate([hidden, emb_next], axis=-1) @ params["mtp"]["proj"]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = _dense_layer(params["mtp"]["layer"], h, cfg, positions)
+        h = L.rmsnorm(params["mtp"]["ln"], h)
+        mtp_logits = L.logits(params["embed"], h, cfg).astype(jnp.float32)
+        # position t predicts labels[t+2]; the last two positions are invalid
+        tgt = jnp.roll(labels, -2, axis=1)
+        valid = jnp.arange(S) < S - 2
+        lse = jax.nn.logsumexp(mtp_logits, axis=-1)
+        picked = jnp.take_along_axis(mtp_logits, tgt[..., None], axis=-1)[..., 0]
+        mtp_nll = jnp.sum((lse - picked) * valid) / jnp.maximum(
+            jnp.sum(valid) * B, 1
+        )
+        loss = loss + mtp_weight * mtp_nll
+        metrics["mtp_nll"] = mtp_nll
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """KV / state caches sized for ``max_len`` context."""
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    nL = cfg.n_layers
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            cache["c"] = jnp.zeros((nL, batch, max_len, cfg.kv_lora_rank), cfg.dtype)
+            cache["kr"] = jnp.zeros(
+                (nL, batch, max_len, cfg.qk_rope_head_dim), cfg.dtype
+            )
+        else:
+            S_c = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+            shape = (nL, batch, S_c, cfg.n_kv_heads, cfg.head_dim)
+            cache["k"] = jnp.zeros(shape, cfg.dtype)
+            cache["v"] = jnp.zeros(shape, cfg.dtype)
+    elif cfg.family == "ssm":
+        st = SSM.ssm_decode_init(cfg, batch)
+        cache["conv"] = jnp.zeros((nL, *st["conv"].shape), st["conv"].dtype)
+        cache["state"] = jnp.zeros((nL, *st["state"].shape), st["state"].dtype)
+    elif cfg.family == "hybrid":
+        st = SSM.ssm_decode_init(cfg, batch)
+        cache["conv"] = jnp.zeros((nL, *st["conv"].shape), st["conv"].dtype)
+        cache["state"] = jnp.zeros((nL, *st["state"].shape), st["state"].dtype)
+        n_inv = cfg.n_layers // cfg.hybrid_attn_every
+        shape = (n_inv, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        cache["shared_k"] = jnp.zeros(shape, cfg.dtype)
+        cache["shared_v"] = jnp.zeros(shape, cfg.dtype)
+    else:
+        raise ValueError(f"decode cache for {cfg.family} lives in encdec.py")
+    return cache
+
+
+def decode_step(
+    params: Params, cache: dict, tokens: jax.Array, cfg: ModelConfig,
+    *, moe_groups: int | None = None,
+) -> tuple[jax.Array, dict]:
+    """One-token decode. tokens: (B, 1). Returns (logits[B,1,V], new cache)."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens, cfg)
+    B = x.shape[0]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            def body(xx, scanned):
+                p, c_l, kr_l = scanned
+                h = L.rmsnorm(p["ln1"], xx)
+                o, c_l, kr_l = MLA.mla_decode_step(p["attn"], h, c_l, kr_l, pos, cfg)
+                xx = xx + o
+                if "moe" in p:
+                    out, _ = MOE.moe_ffn(
+                        p["moe"], L.rmsnorm(p["ln2"], xx), cfg, groups=moe_groups
+                    )
+                    xx = xx + out
+                else:
+                    xx = xx + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], xx))
+                return xx, (c_l, kr_l)
+
+            if cfg.first_k_dense and "dense_layers" in params:
+                nd = cfg.first_k_dense
+                x, (c_d, kr_d) = jax.lax.scan(
+                    body, x, (params["dense_layers"], cache["c"][:nd], cache["kr"][:nd])
+                )
+                x, (c_m, kr_m) = jax.lax.scan(
+                    body, x, (params["layers"], cache["c"][nd:], cache["kr"][nd:])
+                )
+                new_c = jnp.concatenate([c_d, c_m], 0)
+                new_kr = jnp.concatenate([kr_d, kr_m], 0)
+            else:
+                x, (new_c, new_kr) = jax.lax.scan(
+                    body, x, (params["layers"], cache["c"], cache["kr"])
+                )
+            cache = {**cache, "c": new_c, "kr": new_kr, "pos": pos + 1}
+        else:
+            def body(xx, scanned):
+                p, k_l, v_l = scanned
+                h = L.rmsnorm(p["ln1"], xx)
+                o, k_l, v_l = L.gqa_decode_step(p["attn"], h, k_l, v_l, pos, cfg)
+                xx = xx + o
+                if "moe" in p:
+                    out, _ = MOE.moe_ffn(
+                        p["moe"], L.rmsnorm(p["ln2"], xx), cfg, groups=moe_groups
+                    )
+                    xx = xx + out
+                else:
+                    xx = xx + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], xx))
+                return xx, (k_l, v_l)
+
+            x, (new_k, new_v) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"])
+            )
+            cache = {**cache, "k": new_k, "v": new_v, "pos": pos + 1}
+
+    elif cfg.family == "ssm":
+        def body(xx, scanned):
+            p, conv_l, state_l = scanned
+            h = L.rmsnorm(p["ln"], xx)
+            o, st = SSM.ssm_decode_step(p["ssm"], h, {"conv": conv_l, "state": state_l}, cfg)
+            return xx + o, (st["conv"], st["state"])
+
+        x, (new_conv, new_state) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["state"])
+        )
+        cache = {**cache, "conv": new_conv, "state": new_state, "pos": pos + 1}
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        n_inv = cfg.n_layers // k_every
+        new_conv, new_state = [], []
+        new_sk, new_sv = [], []
+        for g in range(n_inv + (1 if cfg.n_layers % k_every else 0)):
+            lo, hi = g * k_every, min((g + 1) * k_every, cfg.n_layers)
+
+            def body(xx, scanned):
+                p, conv_l, state_l = scanned
+                h = L.rmsnorm(p["ln"], xx)
+                o, st = SSM.ssm_decode_step(
+                    p["ssm"], h, {"conv": conv_l, "state": state_l}, cfg
+                )
+                return xx + o, (st["conv"], st["state"])
+
+            group = jax.tree.map(lambda t: t[lo:hi], params["layers"])
+            x, (cv, stt) = jax.lax.scan(
+                body, x, (group, cache["conv"][lo:hi], cache["state"][lo:hi])
+            )
+            new_conv.append(cv)
+            new_state.append(stt)
+            if g < n_inv:
+                p = params["shared_attn"]
+                h = L.rmsnorm(p["ln1"], x)
+                o, sk, sv = L.gqa_decode_step(
+                    p["attn"], h, cache["shared_k"][g], cache["shared_v"][g], pos, cfg
+                )
+                x = x + o
+                x = x + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], x))
+                new_sk.append(sk)
+                new_sv.append(sv)
+        cache = {
+            **cache,
+            "conv": jnp.concatenate(new_conv, 0),
+            "state": jnp.concatenate(new_state, 0),
+            "shared_k": jnp.stack(new_sk, 0),
+            "shared_v": jnp.stack(new_sv, 0),
+            "pos": pos + 1,
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["ln_f"], x)
+    logits = L.logits(params["embed"], x, cfg)
+    return logits, cache

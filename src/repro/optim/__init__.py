@@ -1,0 +1,24 @@
+from repro.optim.adamw import AdamWConfig, global_norm, init, schedule, update
+from repro.optim.quantized import QTensor, dequantize, is_qtensor, quantize
+from repro.optim.compression import (
+    CompressionConfig,
+    apply_error_feedback,
+    compress,
+    decompress,
+    init_error_feedback,
+    quantize_roundtrip,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "CompressionConfig",
+    "apply_error_feedback",
+    "compress",
+    "decompress",
+    "global_norm",
+    "init",
+    "init_error_feedback",
+    "quantize_roundtrip",
+    "schedule",
+    "update",
+]

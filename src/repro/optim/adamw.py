@@ -1,0 +1,116 @@
+"""AdamW with DOLMA-tiered moment storage.
+
+Optimizer moments are the textbook DOLMA remote object: as large as the
+parameters, touched exactly once per step (read+write, write-heavy by the
+paper's rule 3), and never read by the forward pass. Storage ladder, chosen
+by the quantitative placement decision (launch.dryrun.decide_tiering):
+
+  fp32 on device -> host offload (``pinned_host``; TPU backends) ->
+  bf16 on device -> int8 block-quantized on device (8-bit-Adam style).
+
+The ladder exists because XLA-CPU (the dry-run backend) rejects host-memory
+annotations under SPMD; on real TPU pods the host-offload rung is preferred
+and exercised by unit tests where supported.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized import QTensor, dequantize, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_style: str = "f32"     # f32 | bf16 | int8
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    mult = jnp.where(step < cfg.warmup_steps, warm,
+                     cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+    return cfg.lr * mult
+
+
+def _encode(cfg: AdamWConfig, x32: jax.Array):
+    if cfg.moment_style == "bf16":
+        return x32.astype(jnp.bfloat16)
+    if cfg.moment_style == "int8":
+        return quantize(x32)
+    return x32
+
+
+def init(cfg: AdamWConfig, params: Any) -> dict:
+    def zeros(p):
+        return _encode(cfg, jnp.zeros(p.shape, jnp.float32))
+
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(
+    cfg: AdamWConfig, grads: Any, state: dict, params: Any
+) -> tuple[Any, dict, dict]:
+    """One AdamW step (fp32 math; moments re-encoded per ``moment_style``)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    # moments may hold QTensor nodes: flatten up to the params structure
+    treedef = jax.tree.structure(params)
+    p_leaves = jax.tree.leaves(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * dequantize(m) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * dequantize(v) + (1 - cfg.b2) * g * g
+        upd = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (upd + cfg.weight_decay * p32)
+        new_p.append(p_new.astype(p.dtype))
+        new_m.append(_encode(cfg, m32))
+        new_v.append(_encode(cfg, v32))
+
+    unflatten = jax.tree.unflatten
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (
+        unflatten(treedef, new_p),
+        {"m": unflatten(treedef, new_m), "v": unflatten(treedef, new_v),
+         "step": step},
+        metrics,
+    )

@@ -1,0 +1,80 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Gradients crossing the slow axes (DCN between pods; ICI reduce-scatter under
+FSDP) can be compressed to int8 with per-block scales before reduction and
+decompressed after, cutting collective bytes ~4x (bf16->int8 + scale
+overhead). The quantization residual is carried in an error-feedback buffer so
+the scheme stays unbiased over time (Seide et al. / EF-SGD style).
+
+``compress/decompress`` are exact inverses of the wire format and are used by
+tests; ``apply_error_feedback`` wraps a gradient pytree for the train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    block: int = BLOCK
+
+
+def _pad_to_block(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def compress(x: jax.Array, block: int = BLOCK) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 codes, fp32 per-block scales)."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def decompress(codes: jax.Array, scale: jax.Array, shape, block: int = BLOCK):
+    flat = (codes.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def quantize_roundtrip(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """What the receiver sees after compress->reduce->decompress."""
+    codes, scale = compress(x, block)
+    return decompress(codes, scale, x.shape, block).astype(x.dtype)
+
+
+def init_error_feedback(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def apply_error_feedback(
+    grads: Any, residual: Any, cfg: CompressionConfig
+) -> tuple[Any, Any]:
+    """grads' = Q(grads + residual); residual' = (grads + residual) - grads'."""
+    if not cfg.enabled:
+        return grads, residual
+
+    def leaf(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q = quantize_roundtrip(corrected, cfg.block)
+        return q.astype(g.dtype), corrected - q.astype(jnp.float32)
+
+    out = jax.tree.map(leaf, grads, residual)
+    gq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return gq, res

@@ -1,0 +1,70 @@
+"""Block-quantized (int8) optimizer-state storage — 8-bit Adam style.
+
+When host offload of moments is unavailable (the CPU dry-run backend rejects
+memory-space annotations under SPMD; see DESIGN.md §2) or insufficient, the
+moments are stored as int8 codes with per-256-block fp32 scales: 2.25 bytes
+per moment pair per param instead of 8. Codes keep the parameter's shape (so
+they shard with the parameter's PartitionSpec); scales drop the last dim.
+
+Small leaves (< 1 MiB) and leaves whose last dim isn't block-divisible stay
+in fp32 — they are DOLMA "small objects" and live local.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 256
+MIN_QUANT_BYTES = 1 << 20
+
+
+@partial(jax.tree_util.register_dataclass, data_fields=("codes", "scale"),
+         meta_fields=())
+@dataclasses.dataclass
+class QTensor:
+    codes: jax.Array  # int8, same shape as the logical tensor
+    scale: jax.Array  # f32, shape[:-1] + (last // BLOCK,)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+
+def quantizable(shape, dtype) -> bool:
+    if not shape or shape[-1] % BLOCK:
+        return False
+    size = int(np.prod(shape, dtype=np.int64)) * 4
+    return size >= MIN_QUANT_BYTES
+
+
+def quantize(x: jax.Array) -> QTensor | jax.Array:
+    if not quantizable(x.shape, x.dtype):
+        return x.astype(jnp.float32)
+    lead = x.shape[:-1]
+    nblk = x.shape[-1] // BLOCK
+    xb = x.astype(jnp.float32).reshape(*lead, nblk, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127).astype(jnp.int8)
+    return QTensor(codes=codes.reshape(x.shape), scale=scale)
+
+
+def dequantize(q: QTensor | jax.Array) -> jax.Array:
+    if not isinstance(q, QTensor):
+        return q.astype(jnp.float32)
+    lead = q.codes.shape[:-1]
+    nblk = q.scale.shape[-1]
+    xb = q.codes.astype(jnp.float32).reshape(*lead, nblk, -1)
+    return (xb * q.scale[..., None]).reshape(q.codes.shape)
+
+
+def is_qtensor(x) -> bool:
+    return isinstance(x, QTensor)

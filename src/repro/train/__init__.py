@@ -1,0 +1,1 @@
+from repro.train.step import TrainStepConfig, init_train_state, make_train_step

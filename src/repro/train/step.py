@@ -1,0 +1,113 @@
+"""Train step factory: loss -> grads -> (optional compression) -> AdamW.
+
+Integrates the DOLMA pieces at the step level:
+  * placement-informed shardings for params and optimizer moments
+    (:func:`decide_tiering` — the paper's "quantitative analysis to decide a
+    suitable local memory size" applied to HBM),
+  * dual-buffer weight streaming inside the model's layer scan (prefetch),
+  * microbatch gradient accumulation (bounds activation memory),
+  * optional int8 error-feedback gradient compression on the reduction path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.optim import adamw
+from repro.optim.compression import CompressionConfig, apply_error_feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    remat: str = "full"
+    microbatches: int = 1
+    prefetch: bool = True          # dual-buffer layer-weight prefetch
+    moe_groups: int | None = None
+    compression: CompressionConfig = CompressionConfig()
+
+
+def make_train_step(model_cfg: ModelConfig, step_cfg: TrainStepConfig,
+                    opt_cfg: adamw.AdamWConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    model = get_model(model_cfg)
+
+    def loss_of(params, batch):
+        return model.loss_fn(
+            params, batch, model_cfg,
+            remat=step_cfg.remat,
+            prefetch=step_cfg.prefetch,
+            moe_groups=step_cfg.moe_groups,
+        )
+
+    def grads_of(params, batch):
+        n_mb = step_cfg.microbatches
+        if n_mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch
+            )
+            return loss, metrics, grads
+
+        def split(x):
+            B = x.shape[0]
+            return x.reshape(n_mb, B // n_mb, *x.shape[1:])
+
+        mb_batch = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mb
+            )
+            acc_loss, acc_metrics, acc_grads = acc
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            acc_metrics = jax.tree.map(jnp.add, acc_metrics, metrics)
+            return (acc_loss + loss, acc_metrics, acc_grads), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        loss0 = jnp.zeros((), jnp.float32)
+        metrics0 = jax.eval_shape(lambda b: loss_of(params, b)[1], jax.tree.map(
+            lambda x: x[0], mb_batch))
+        metrics0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), metrics0)
+        (loss, metrics, grads), _ = jax.lax.scan(
+            body, (loss0, metrics0, zero_g), mb_batch
+        )
+        inv = 1.0 / n_mb
+        return (
+            loss * inv,
+            jax.tree.map(lambda x: x * inv, metrics),
+            jax.tree.map(lambda g: g * inv, grads),
+        )
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if step_cfg.compression.enabled:
+            grads, residual = apply_error_feedback(
+                grads, opt_state["ef"], step_cfg.compression
+            )
+        params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, {k: v for k, v in opt_state.items() if k != "ef"}, params
+        )
+        if step_cfg.compression.enabled:
+            new_opt["ef"] = residual
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(key, model_cfg: ModelConfig, step_cfg: TrainStepConfig,
+                     opt_cfg: adamw.AdamWConfig):
+    model = get_model(model_cfg)
+    params = model.init_params(key, model_cfg)
+    opt_state = adamw.init(opt_cfg, params)
+    if step_cfg.compression.enabled:
+        from repro.optim.compression import init_error_feedback
+
+        opt_state["ef"] = init_error_feedback(params)
+    return params, opt_state

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# CPU determinism for allclose tests; smoke tests see exactly ONE device
+# (the dry-run sets its own 512-device flag in its own process).
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

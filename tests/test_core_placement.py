@@ -1,0 +1,164 @@
+"""Placement policy (§4.1), object catalog, metadata table."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MetadataTable,
+    ObjectCatalog,
+    ObjectKind,
+    ObjectMeta,
+    PlacementPolicy,
+    SMALL_OBJECT_BYTES,
+    Status,
+    Tier,
+    demotion_order,
+)
+from repro.core.objects import DataObject
+
+
+def _obj(name, kbytes, reads=1, writes=0, lifetime=math.inf):
+    return DataObject(
+        name=name, shape=(kbytes * 256,), dtype=np.float32,
+        n_reads=reads, n_writes=writes, lifetime_iters=lifetime,
+    )
+
+
+class TestDemotionOrder:
+    def test_rule1_size_descending(self):
+        objs = [_obj("s", 8), _obj("l", 64), _obj("m", 16)]
+        assert [o.name for o in demotion_order(objs)] == ["l", "m", "s"]
+
+    def test_rule2_cold_first_on_ties(self):
+        objs = [_obj("hot", 16, reads=50), _obj("cold", 16, reads=1)]
+        assert [o.name for o in demotion_order(objs)] == ["cold", "hot"]
+
+    def test_rule3_write_heavy_first_on_ties(self):
+        objs = [
+            _obj("ro", 16, reads=4, writes=0),
+            _obj("wr", 16, reads=2, writes=2),
+        ]
+        assert [o.name for o in demotion_order(objs)] == ["wr", "ro"]
+
+    def test_small_and_short_lived_excluded(self):
+        objs = [
+            DataObject("tiny", (8,), np.float32, n_reads=1),
+            _obj("temp", 64, lifetime=0),
+            _obj("big", 16),
+        ]
+        assert [o.name for o in demotion_order(objs)] == ["big"]
+
+
+class TestPlacementPlan:
+    def test_budget_respected(self):
+        cat = ObjectCatalog([_obj(f"o{i}", 64) for i in range(8)])
+        plan = PlacementPolicy().plan(cat, local_fraction=0.25)
+        assert plan.local_bytes <= plan.budget_bytes + 64 * 256 * 4
+
+    def test_full_budget_keeps_everything_local(self):
+        cat = ObjectCatalog([_obj("a", 64), _obj("b", 32)])
+        plan = PlacementPolicy().plan(cat, local_fraction=1.0)
+        assert not plan.remote_names()
+        assert plan.memory_saving == 0.0
+
+    def test_all_large_remote_mode(self):
+        cat = ObjectCatalog(
+            [_obj("a", 64), DataObject("tiny", (4,), np.float32)]
+        )
+        plan = PlacementPolicy(all_large_remote=True).plan(cat, local_fraction=0.5)
+        assert plan.tier_of("a") is Tier.REMOTE
+        assert plan.tier_of("tiny") is Tier.LOCAL
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        sizes=st.lists(st.integers(1, 512), min_size=1, max_size=24),
+        frac=st.floats(0.0, 1.0),
+    )
+    def test_property_budget_and_partition(self, sizes, frac):
+        cat = ObjectCatalog([_obj(f"o{i}", s) for i, s in enumerate(sizes)])
+        plan = PlacementPolicy().plan(cat, local_fraction=frac)
+        # partition: every object has exactly one tier
+        assert set(plan.tiers) == set(cat.names())
+        # accounting identity
+        assert plan.local_bytes + plan.remote_bytes == plan.peak_bytes
+        # budget: local fits, OR nothing demotable remains
+        demotable = [o.name for o in demotion_order(cat)]
+        over = plan.local_bytes > plan.budget_bytes
+        if over:
+            assert all(plan.tiers[n] is Tier.REMOTE for n in demotable)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_property_demotes_in_rank_order(self, data):
+        n = data.draw(st.integers(2, 12))
+        objs = [
+            _obj(f"o{i}", data.draw(st.integers(1, 64)),
+                 reads=data.draw(st.integers(0, 9)))
+            for i in range(n)
+        ]
+        cat = ObjectCatalog(objs)
+        frac = data.draw(st.floats(0.0, 1.0))
+        plan = PlacementPolicy().plan(cat, local_fraction=frac)
+        order = [o.name for o in demotion_order(cat)]
+        remote = [n_ for n_ in order if plan.tiers[n_] is Tier.REMOTE]
+        # remote set is always a PREFIX of the ranking
+        assert remote == order[: len(remote)]
+
+
+class TestCatalog:
+    def test_census_large_dominates(self):
+        cat = ObjectCatalog(
+            [_obj("big", 1024)]
+            + [DataObject(f"t{i}", (16,), np.float32) for i in range(100)]
+        )
+        c = cat.census()
+        assert c["n_large"] == 1
+        assert c["large_fraction_of_peak"] > 0.9
+
+    def test_from_step_fn_counts_reads(self):
+        def step(params, x):
+            h = x @ params["w1"]
+            h = h @ params["w2"] + x @ params["w1"]  # w1 read twice
+            return h.sum()
+
+        params = {"w1": jnp.zeros((32, 32)), "w2": jnp.zeros((32, 32))}
+        cat = ObjectCatalog.from_step_fn(
+            step, params, jnp.zeros((4, 32)),
+            kinds=[ObjectKind.PARAM, ObjectKind.INPUT],
+        )
+        assert cat["arg0['w1']"].n_reads == 2
+        assert cat["arg0['w2']"].n_reads == 1
+
+    def test_sim_bytes_override(self):
+        o = DataObject("x", (256,), np.float32, sim_bytes=123456)
+        assert o.size_bytes == 123456
+
+
+class TestMetadataTable:
+    def test_snapshot_restore_roundtrip(self):
+        t = MetadataTable()
+        t.register(ObjectMeta("a", Tier.REMOTE, Status.DIRTY, 1024, epoch=7))
+        t.register(ObjectMeta("b", Tier.LOCAL, Status.PRESENT, 64))
+        t2 = MetadataTable.restore(t.snapshot())
+        assert t2.get("a").epoch == 7
+        assert t2.get("a").tier is Tier.REMOTE
+        assert t2.get("b").status is Status.PRESENT
+        assert len(t2) == 2
+
+    def test_dirty_since(self):
+        t = MetadataTable()
+        t.register(ObjectMeta("a", Tier.REMOTE, Status.FLUSHED, 10, epoch=3))
+        t.register(ObjectMeta("b", Tier.REMOTE, Status.FLUSHED, 10, epoch=9))
+        assert [m.name for m in t.dirty_since(5)] == ["b"]
+
+    def test_local_remote_accounting(self):
+        t = MetadataTable()
+        t.register(ObjectMeta("a", Tier.REMOTE, Status.FLUSHED, 100))
+        t.register(ObjectMeta("b", Tier.LOCAL, Status.PRESENT, 40))
+        t.register(ObjectMeta("c", Tier.CACHED, Status.PRESENT, 7))
+        assert t.remote_bytes() == 100
+        assert t.local_bytes() == 47

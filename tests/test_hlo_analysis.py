@@ -1,0 +1,69 @@
+"""Loop-aware HLO analysis: FLOP counting, trip-count propagation, collectives."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import Collective, parse_module
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    L, M, K, N = 8, 32, 64, 32
+
+    def step(stacked_w, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, stacked_w)
+        return y.sum()
+
+    compiled = _compile(step, jnp.zeros((L, K, K)), jnp.zeros((M, K)))
+    a = parse_module(compiled.as_text())
+    expect = 2 * M * K * K * L  # dot flops, L iterations
+    assert a.flops == pytest.approx(expect, rel=0.25), (
+        f"loop-corrected flops {a.flops} vs expected {expect} "
+        "(xla cost_analysis would report ~1/L of this)"
+    )
+
+
+def test_nested_scan_trip_counts_compose():
+    def step(w, x):
+        def outer(c, _):
+            def inner(cc, _):
+                return jnp.tanh(cc @ w), None
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y.sum()
+
+    M = K = 32
+    compiled = _compile(step, jnp.zeros((K, K)), jnp.zeros((M, K)))
+    a = parse_module(compiled.as_text())
+    expect = 2 * M * K * K * 12  # 3 * 4 iterations
+    assert a.flops == pytest.approx(expect, rel=0.25)
+
+
+def test_collective_wire_estimates():
+    c = Collective(op="all-reduce", result_bytes=1000, group_size=4,
+                   computation="e")
+    assert c.wire_bytes == pytest.approx(2 * 3 / 4 * 1000)
+    c = Collective(op="all-gather", result_bytes=1000, group_size=4,
+                   computation="e")
+    assert c.wire_bytes == pytest.approx(3 / 4 * 1000)
+    c = Collective(op="reduce-scatter", result_bytes=1000, group_size=4,
+                   computation="e")
+    assert c.wire_bytes == pytest.approx(3 * 1000)
+
+
+def test_bytes_exclude_fusion_internals():
+    """Fused elementwise chains count call-site traffic, not inner ops."""
+    def f(x):
+        return jnp.tanh(x * 2 + 1).sum()
+
+    compiled = _compile(f, jnp.zeros((256, 256)))
+    a = parse_module(compiled.as_text())
+    nbytes = 256 * 256 * 4
+    # input + small output, not 3x input for the 3 elementwise ops
+    assert a.bytes < 4 * nbytes

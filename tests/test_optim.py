@@ -1,0 +1,130 @@
+"""AdamW (+ moment styles), quantized state, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    AdamWConfig,
+    CompressionConfig,
+    apply_error_feedback,
+    compress,
+    decompress,
+    init as adamw_init,
+    init_error_feedback,
+    quantize_roundtrip,
+    schedule,
+    update,
+)
+from repro.optim.quantized import QTensor, dequantize, quantize
+
+
+def _toy_state(key, moment_style="f32"):
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0,
+                      moment_style=moment_style)
+    params = {"w": jax.random.normal(key, (8, 256)),
+              "b": jnp.zeros((4,))}
+    return cfg, params, adamw_init(cfg, params)
+
+
+class TestAdamW:
+    def test_first_step_matches_closed_form(self, rng_key):
+        cfg, params, state = _toy_state(rng_key)
+        grads = jax.tree.map(jnp.ones_like, params)
+        new_p, new_s, metrics = update(cfg, grads, state, params)
+        # step 1 with zero moments: update = lr * g_hat, g_hat ~ 1/(1+eps)
+        lr = float(schedule(cfg, jnp.ones(())))
+        clip = min(1.0, cfg.grad_clip / float(metrics["grad_norm"]))
+        expect = params["b"] - lr * (clip / (clip + cfg.eps))
+        np.testing.assert_allclose(new_p["b"], expect, rtol=1e-5)
+        assert int(new_s["step"]) == 1
+
+    def test_grad_clip_caps_norm(self, rng_key):
+        cfg, params, state = _toy_state(rng_key)
+        grads = jax.tree.map(lambda p: 1e6 * jnp.ones_like(p), params)
+        _p1, _s1, m = update(cfg, grads, state, params)
+        assert float(m["grad_norm"]) > cfg.grad_clip  # raw norm reported
+
+    @pytest.mark.parametrize("style", ["bf16", "int8"])
+    def test_reduced_precision_moments_track_f32(self, rng_key, style):
+        cfg32, params, s32 = _toy_state(rng_key, "f32")
+        cfgq, _, sq = _toy_state(rng_key, style)
+        p32, pq = params, params
+        for i in range(5):
+            g = jax.tree.map(
+                lambda p: 0.1 * jax.random.normal(
+                    jax.random.fold_in(rng_key, i), p.shape
+                ), params)
+            p32, s32, _ = update(cfg32, g, s32, p32)
+            pq, sq, _ = update(cfgq, g, sq, pq)
+        err = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(pq))
+        )
+        scale = float(jnp.max(jnp.abs(p32["w"])))
+        assert err < 0.05 * scale, f"{style} diverged: {err}"
+
+    def test_int8_moments_memory_shape(self, rng_key):
+        cfg, params, state = _toy_state(rng_key, "int8")
+        m_w = state["m"]["w"]
+        assert isinstance(m_w, QTensor) or m_w.dtype == jnp.float32
+        # big leaf quantizes; small 'b' leaf stays f32
+        assert not isinstance(state["m"]["b"], QTensor)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, decay_steps=100)
+        s = [float(schedule(cfg, jnp.asarray(t))) for t in [1, 5, 10, 50, 100]]
+        assert s[0] < s[1] < s[2]          # warmup rises
+        assert s[2] >= s[3] >= s[4]        # cosine decays
+        assert s[4] >= cfg.lr * cfg.min_lr_ratio - 1e-6
+
+
+class TestQuantizedState:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_property_roundtrip_error_bound(self, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (512, 512))
+        q = quantize(x)
+        back = dequantize(q)
+        # blockwise int8: error <= scale = max|block|/127
+        err = jnp.abs(back - x)
+        assert float(jnp.max(err)) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+    def test_small_leaf_not_quantized(self):
+        x = jnp.ones((256,))
+        assert not isinstance(quantize(x), QTensor)
+
+    def test_pytree_registration(self):
+        q = quantize(jax.random.normal(jax.random.PRNGKey(0), (512, 512)))
+        leaves = jax.tree.leaves(q)
+        assert len(leaves) == 2  # codes + scale
+
+
+class TestCompression:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4000))
+    def test_property_roundtrip(self, seed, n):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+        codes, scale = compress(x)
+        back = decompress(codes, scale, x.shape)
+        assert float(jnp.max(jnp.abs(back - x))) <= \
+            float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+    def test_error_feedback_unbiased_over_time(self):
+        """Sum of EF-compressed grads converges to sum of true grads."""
+        cfg = CompressionConfig(enabled=True)
+        g_true = {"w": 0.01 * jnp.ones((1024,))}
+        residual = init_error_feedback(g_true)
+        total = jnp.zeros((1024,))
+        for _ in range(50):
+            gq, residual = apply_error_feedback(g_true, residual, cfg)
+            total = total + gq["w"]
+        np.testing.assert_allclose(total, 50 * g_true["w"],
+                                   atol=float(jnp.max(jnp.abs(residual["w"]))) + 1e-5)
+
+    def test_wire_bytes_reduction(self):
+        x = jnp.ones((1 << 16,), jnp.float32)
+        codes, scale = compress(x)
+        wire = codes.nbytes + scale.nbytes
+        assert wire < x.nbytes / 3.5  # ~4x minus scale overhead

@@ -1,0 +1,129 @@
+"""DolmaRuntime semantics + the eight HPC workloads' bit-exactness."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DolmaRuntime,
+    ETHERNET_25G,
+    INFINIBAND_100G,
+    RemoteStore,
+    SimClock,
+)
+from repro.core.placement import PlacementPolicy
+from repro.hpc import WORKLOADS, run_workload
+
+SIM = 1000.0 / 0.2
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_workload_bit_exact_vs_oracle(name):
+    cls = WORKLOADS[name]
+    oracle = run_workload(cls(scale=0.2, seed=3),
+                          DolmaRuntime(local_fraction=1.0), n_iters=3)
+    tiered = run_workload(
+        cls(scale=0.2, seed=3),
+        DolmaRuntime(local_fraction=0.2, dual_buffer=True, sim_scale=SIM),
+        n_iters=3,
+    )
+    assert tiered.checksum == pytest.approx(oracle.checksum, rel=1e-9)
+    assert tiered.elapsed_us >= oracle.elapsed_us  # tiering never free
+
+
+@pytest.mark.parametrize("name", ["CG", "MG", "FT"])
+def test_dual_buffer_helps(name):
+    cls = WORKLOADS[name]
+    times = {}
+    for dual in (True, False):
+        rt = DolmaRuntime(local_fraction=0.3, dual_buffer=dual, sim_scale=SIM,
+                          policy=PlacementPolicy(all_large_remote=True))
+        times[dual] = run_workload(cls(scale=0.2, seed=1), rt, 4).elapsed_us
+    assert times[True] < times[False]
+
+
+def test_simulation_deterministic():
+    def run():
+        rt = DolmaRuntime(local_fraction=0.2, sim_scale=SIM)
+        return run_workload(WORKLOADS["CG"](scale=0.2, seed=5), rt, 3)
+
+    a, b = run(), run()
+    assert a.elapsed_us == b.elapsed_us
+    assert a.checksum == b.checksum
+
+
+def test_ethernet_slower_than_infiniband():
+    def run(fabric):
+        rt = DolmaRuntime(local_fraction=0.1, fabric=fabric, sim_scale=SIM)
+        return run_workload(WORKLOADS["MG"](scale=0.2, seed=1), rt, 3).elapsed_us
+
+    assert run(ETHERNET_25G) > run(INFINIBAND_100G)
+
+
+def test_sync_writes_slower():
+    def run(sync):
+        rt = DolmaRuntime(local_fraction=0.1, sync_writes=sync, sim_scale=SIM,
+                          dual_buffer=False)
+        return run_workload(WORKLOADS["MG"](scale=0.2, seed=1), rt, 3).elapsed_us
+
+    assert run(True) >= run(False)
+
+
+class TestRemoteStore:
+    def test_read_after_write_ordering(self):
+        store = RemoteStore()
+        store.alloc("x", np.arange(16, dtype=np.float64))
+        store.write("x", np.full(16, 7.0), timeline="w")  # async
+        data, t_read = store.read("x", timeline="r")
+        # RAW: the read completes after the pending write
+        assert np.all(data.view(np.float64) == 7.0)
+        obj = store._objects["x"]
+        assert t_read >= obj.pending_write_until
+
+    def test_fence_waits_for_writes(self):
+        store = RemoteStore()
+        store.alloc("x", np.zeros(1 << 16))
+        end = store.write("x", np.ones(1 << 16))
+        t = store.fence(timeline="main")
+        assert t >= end
+
+    def test_atomics(self):
+        store = RemoteStore()
+        assert store.atomic_fetch_add("ctr", 5) == 0
+        assert store.atomic_fetch_add("ctr", 2) == 5
+        assert store.atomic_cas("ctr", 7, 11)
+        assert not store.atomic_cas("ctr", 7, 13)
+        assert store.atomic_read("ctr") == 11
+
+    def test_snapshot_restore(self):
+        store = RemoteStore()
+        store.alloc("x", np.arange(8.0))
+        blobs = store.snapshot_objects()
+        store.write("x", np.zeros(8))
+        store.restore_objects(blobs)
+        assert np.all(store._objects["x"].data == np.arange(8.0))
+
+
+def test_resident_cache_reduces_refetch():
+    """Second iteration fetches less than the first (resident portion)."""
+    rt = DolmaRuntime(local_fraction=0.5, sim_scale=SIM,
+                      policy=PlacementPolicy(all_large_remote=True),
+                      dual_buffer=False)
+    rt.alloc("a", np.zeros(1 << 18))
+    rt.finalize()
+    durations = []
+    for _ in range(2):
+        t0 = rt.clock.now(rt.timeline)
+        with rt.step():
+            rt.fetch("a")
+        durations.append(rt.clock.now(rt.timeline) - t0)
+    assert durations[1] < durations[0]
+
+
+def test_peak_local_within_capacity():
+    rt = DolmaRuntime(local_fraction=0.3, sim_scale=SIM)
+    rt.alloc("a", np.zeros(1 << 18))
+    rt.alloc("b", np.zeros(1 << 16))
+    rt.finalize()
+    with rt.step():
+        rt.fetch("a")
+        rt.fetch("b")
+    assert rt.peak_local_bytes() <= rt.local_capacity_bytes()
