@@ -1,0 +1,152 @@
+"""Pool scaling: nodes x stripe width x failure rate (new figure).
+
+Sweeps the multi-node memory pool along three axes:
+
+  * **node count** (1/2/4/8) — aggregate read bandwidth of a striped
+    large-object fetch; the acceptance bar is 4-node striped reads reaching
+    > 2x the single-node effective read bandwidth on the IB model;
+  * **stripe width** (256 KiB / 1 MiB / 4 MiB) — small extents spread better
+    but pay more per-op base cost;
+  * **failure** — with k=2 replication, a node is killed mid-workload; the
+    run must complete with *bit-identical* checksums, and the degraded-mode
+    overhead (slower reads + recovery re-replication) is reported.
+
+Emits the harness CSV contract (name,us_per_call,derived) and a JSON blob.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from repro.core.fabric import INFINIBAND_100G
+from repro.core.pool import MemoryPool
+
+from benchmarks.common import emit, save_json
+
+KIB = 1 << 10
+MIB = 1 << 20
+
+OBJECT_BYTES = 32 * MIB
+NODE_COUNTS = (1, 2, 4, 8)
+STRIPE_WIDTHS = (256 * KIB, 1 * MIB, 4 * MIB)
+FAILURE_WORKLOAD_ITERS = 4
+
+
+def _blob(nbytes: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).integers(
+        0, 255, size=nbytes, dtype=np.uint8
+    )
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return hashlib.sha1(arr.tobytes()).hexdigest()
+
+
+# -- axis 1+2: aggregate read bandwidth vs nodes x stripe --------------------
+def bandwidth_sweep() -> dict:
+    raw = _blob(OBJECT_BYTES)
+    rows: dict[str, dict] = {}
+    for stripe in STRIPE_WIDTHS:
+        per_nodes = {}
+        for n in NODE_COUNTS:
+            pool = MemoryPool(n, fabric=INFINIBAND_100G, stripe_bytes=stripe)
+            pool.alloc("blob", raw)
+            _data, end = pool.read("blob", issue_at_us=0.0, sync=False)
+            gbps = OBJECT_BYTES / (end * 1e3)  # bytes/us -> GB/s
+            per_nodes[n] = {"read_us": end, "eff_gbps": round(gbps, 3)}
+            emit(
+                f"fig_pool/read_{n}n_stripe{stripe // KIB}k",
+                end,
+                f"eff={gbps:.2f}GB/s",
+            )
+        base = per_nodes[1]["eff_gbps"]
+        for n in NODE_COUNTS:
+            per_nodes[n]["scaling_x"] = round(per_nodes[n]["eff_gbps"] / base, 2)
+        rows[f"stripe_{stripe // KIB}k"] = per_nodes
+    return rows
+
+
+# -- axis 3: failure + degraded-mode overhead --------------------------------
+def _workload(pool: MemoryPool, *, kill_node: int | None, recover: bool) -> dict:
+    """A read/modify/write loop over striped objects; optionally kill a node
+    between iterations and (optionally) run recovery. Returns checksums and
+    sim-times so failure runs can be compared bit-for-bit to clean runs."""
+    objs = {f"obj{i}": _blob(4 * MIB, seed=10 + i) for i in range(4)}
+    for name, data in objs.items():
+        pool.alloc(name, data)
+    state = {name: data.copy() for name, data in objs.items()}
+    t_end = 0.0
+    recovery_us = 0.0
+    for it in range(FAILURE_WORKLOAD_ITERS):
+        if kill_node is not None and it == FAILURE_WORKLOAD_ITERS // 2:
+            pool.fail_node(kill_node, timeline="main")
+            if recover:
+                recovery_us = pool.recover()["recovery_us"]
+        for name in objs:
+            data, t_end = pool.read_object(name, timeline="main")
+            data = (data.astype(np.uint16) + 1).astype(np.uint8)  # modify
+            state[name] = data
+            t_end = max(t_end, pool.write(name, data, timeline="main"))
+    pool.fence(timeline="main")
+    elapsed = pool.clock.now("main")
+    digest = _checksum(np.concatenate([state[n] for n in sorted(state)]))
+    return {"elapsed_us": elapsed, "checksum": digest,
+            "recovery_us": recovery_us, "stats": pool.stats()}
+
+
+def failure_sweep() -> dict:
+    mk = lambda: MemoryPool(4, fabric=INFINIBAND_100G,
+                            stripe_bytes=1 * MIB, replication=2)
+    clean = _workload(mk(), kill_node=None, recover=False)
+    degraded = _workload(mk(), kill_node=1, recover=False)
+    recovered = _workload(mk(), kill_node=1, recover=True)
+
+    assert degraded["checksum"] == clean["checksum"], (
+        "node loss with k=2 must be bit-transparent"
+    )
+    assert recovered["checksum"] == clean["checksum"]
+
+    overhead_degraded = degraded["elapsed_us"] / clean["elapsed_us"]
+    overhead_recovered = (
+        recovered["elapsed_us"] + recovered["recovery_us"]
+    ) / clean["elapsed_us"]
+    emit("fig_pool/clean_4n_k2", clean["elapsed_us"], "failures=0")
+    emit("fig_pool/degraded_4n_k2", degraded["elapsed_us"],
+         f"overhead={overhead_degraded:.2f}x bit_identical=True")
+    emit("fig_pool/recovered_4n_k2",
+         recovered["elapsed_us"] + recovered["recovery_us"],
+         f"overhead={overhead_recovered:.2f}x "
+         f"recovery={recovered['recovery_us']:.0f}us")
+    return {
+        "clean_us": clean["elapsed_us"],
+        "degraded_us": degraded["elapsed_us"],
+        "recovered_us": recovered["elapsed_us"],
+        "recovery_us": recovered["recovery_us"],
+        "overhead_degraded_x": round(overhead_degraded, 3),
+        "overhead_recovered_x": round(overhead_recovered, 3),
+        "bit_identical": True,
+    }
+
+
+def run() -> dict:
+    bw = bandwidth_sweep()
+    # acceptance: 4-node striped reads > 2x single-node effective bandwidth
+    for stripe, per_nodes in bw.items():
+        assert per_nodes[4]["scaling_x"] > 2.0, (
+            f"{stripe}: 4-node scaling {per_nodes[4]['scaling_x']}x <= 2x"
+        )
+    fail = failure_sweep()
+    out = {"bandwidth": bw, "failure": fail}
+    save_json("fig_pool_scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    best = max(
+        per[8]["scaling_x"] for per in res["bandwidth"].values()
+    )
+    print(f"# 8-node peak scaling {best:.1f}x; "
+          f"degraded overhead {res['failure']['overhead_degraded_x']:.2f}x; "
+          f"all checksums bit-identical")

@@ -9,6 +9,7 @@ and writes structured JSON under benchmarks/results/.
   fig8  — multi-thread scaling, DOLMA vs Oracle
   fig9  — dual-buffer ablation
   fig10 — CG problem-size scaling (DOLMA vs Oracle vs sync RDMA)
+  fig_pool — multi-node pool: nodes x stripe x failure (bandwidth + recovery)
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
 """
 from __future__ import annotations
@@ -26,6 +27,7 @@ def main() -> None:
         fig8_threads,
         fig9_dualbuffer,
         fig10_problem_sizes,
+        fig_pool_scaling,
     )
 
     print("name,us_per_call,derived")
@@ -36,6 +38,7 @@ def main() -> None:
         ("fig8", fig8_threads),
         ("fig9", fig9_dualbuffer),
         ("fig10", fig10_problem_sizes),
+        ("fig_pool", fig_pool_scaling),
     ]
     failures = 0
     for name, mod in modules:

@@ -80,16 +80,17 @@ class CheckpointManager:
         if blocking:
             self.wait()
 
-    def _write(self, step: int, snap: dict, meta: dict) -> None:
+    def _write(self, step: int, snap: dict, meta: dict,
+               prefix: str = "step") -> None:
         t0 = time.time()
-        tmp = self.dir / f"tmp.{step}"
-        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"tmp.{prefix}.{step}"
+        final = self.dir / f"{prefix}_{step:08d}"
         if tmp.exists():
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         written = 0
         skipped = 0
-        prev = self.latest_dir(exclude=final)
+        prev = self.latest_dir(exclude=final, prefix=prefix)
         manifest = {}
         for group, flat in snap.items():
             for key, arr in flat.items():
@@ -124,13 +125,66 @@ class CheckpointManager:
             self._writer.join()
 
     def _gc(self) -> None:
-        ckpts = sorted(self.dir.glob("step_*"))
-        for old in ckpts[: -self.keep]:
-            shutil.rmtree(old, ignore_errors=True)
+        # training and store snapshots live in separate step_*/store_*
+        # namespaces; each keeps its own most-recent ``keep``
+        for prefix in ("step", "store"):
+            ckpts = sorted(self.dir.glob(f"{prefix}_*"))
+            for old in ckpts[: -self.keep]:
+                shutil.rmtree(old, ignore_errors=True)
+
+    # -- remote-store / memory-pool checkpointing ---------------------------
+    STORE_PREFIX = "store:"
+
+    def save_store(self, step: int, store: Any, *,
+                   metadata: dict | None = None, blocking: bool = False) -> None:
+        """Checkpoint a RemoteStore/MemoryPool's logical objects.
+
+        The snapshot reassembles striped/replicated extents into logical
+        objects (``snapshot_objects``), so a restore works on *any* pool
+        geometry — including one that lost nodes since the save (the
+        node-failure recovery path, DESIGN.md §5). Store snapshots live in
+        their own ``store_<n>`` directory namespace so they never collide
+        with (or get shadowed by) training checkpoints at the same step.
+        """
+        snap = {
+            "store": {
+                self.STORE_PREFIX + name: np.asarray(arr)
+                for name, arr in store.snapshot_objects().items()
+            }
+        }
+        meta = dict(metadata or {})
+        meta["step"] = step
+        meta["kind"] = "store"
+        meta["time"] = time.time()
+        try:
+            meta["store_stats"] = store.stats()
+        except Exception:
+            pass
+        self.wait()
+        self._writer = threading.Thread(
+            target=self._write, args=(step, snap, meta, "store"), daemon=True
+        )
+        self._writer.start()
+        if blocking:
+            self.wait()
+
+    def restore_store_blobs(self) -> dict[str, np.ndarray] | None:
+        """Latest store snapshot as ``{object_name: array}`` — the input to
+        :meth:`MemoryPool.recover(from_blobs=...)` and ``restore_objects``."""
+        d = self.latest_dir(prefix="store")
+        if d is None:
+            return None
+        meta = json.loads((d / "meta.json").read_text())
+        out = {}
+        for key, entry in meta["manifest"].items():
+            if key.startswith(self.STORE_PREFIX):
+                out[key[len(self.STORE_PREFIX):]] = np.load(d / entry["file"])
+        return out or None
 
     # -- restore ------------------------------------------------------------
-    def latest_dir(self, exclude: pathlib.Path | None = None):
-        ckpts = sorted(d for d in self.dir.glob("step_*") if d != exclude)
+    def latest_dir(self, exclude: pathlib.Path | None = None,
+                   prefix: str = "step"):
+        ckpts = sorted(d for d in self.dir.glob(f"{prefix}_*") if d != exclude)
         return ckpts[-1] if ckpts else None
 
     def latest_step(self) -> int | None:

@@ -11,7 +11,8 @@ from repro.core.fabric import (
 from repro.core.metadata import MetadataTable, ObjectMeta, Status, Tier
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind, SMALL_OBJECT_BYTES
 from repro.core.placement import PlacementPlan, PlacementPolicy, demotion_order
-from repro.core.remote_store import RemoteStore
+from repro.core.pool import ExtentLostError, MemoryPool
+from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
 from repro.core.tiering import (
     TieringConfig,
@@ -25,11 +26,14 @@ __all__ = [
     "DataObject",
     "DolmaRuntime",
     "ETHERNET_25G",
+    "ExtentLostError",
     "FabricModel",
     "FabricResource",
     "INFINIBAND_100G",
     "LOCAL_DDR",
+    "MemoryPool",
     "MetadataTable",
+    "NodeFailure",
     "ObjectCatalog",
     "ObjectKind",
     "ObjectMeta",

@@ -36,6 +36,7 @@ from repro.core.fabric import (
 from repro.core.metadata import MetadataTable, ObjectMeta, Status, Tier
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
 from repro.core.placement import PlacementPlan, PlacementPolicy
+from repro.core.pool import MemoryPool
 from repro.core.remote_store import RemoteStore
 
 # A 2-socket Xeon class node (the paper's testbed) for the compute model.
@@ -65,6 +66,7 @@ class DolmaRuntime:
         policy: PlacementPolicy | None = None,
         timeline: str = "main",
         sim_scale: float = 1.0,
+        store: RemoteStore | MemoryPool | None = None,
     ) -> None:
         # sim_scale: fabric/compute costs are charged at sim_scale x the real
         # array bytes, so small (fast, testable) arrays model paper-scale
@@ -73,14 +75,18 @@ class DolmaRuntime:
         self.fabric = fabric
         self.dual_buffer = dual_buffer
         self.sync_writes = sync_writes
-        self.clock = clock or SimClock()
+        if store is not None and clock is not None and store.clock is not clock:
+            raise ValueError("store and runtime must share one SimClock")
+        self.clock = store.clock if store is not None else (clock or SimClock())
         self.compute_gflops = compute_gflops
         self.local_mem = local_mem
         self.policy = policy or PlacementPolicy()
         self.timeline = timeline
         self.sim_scale = sim_scale
 
-        self.store = RemoteStore(clock=self.clock, fabric=fabric)
+        # the remote tier: a single memory node by default, or any object
+        # with the store API — notably a multi-node MemoryPool
+        self.store = store or RemoteStore(clock=self.clock, fabric=fabric)
         self.metadata = MetadataTable()
         self._live: dict[str, _LiveObject] = {}
         self._finalized = False
@@ -129,14 +135,43 @@ class DolmaRuntime:
     def finalize(self) -> PlacementPlan:
         """Run placement, demote REMOTE objects, size the cache region."""
         catalog = ObjectCatalog(lo.obj for lo in self._live.values())
-        plan = self.policy.plan(catalog, local_fraction=self.local_fraction)
+        pooled = isinstance(self.store, MemoryPool)
+        # Plan-level node capacity works in the plan's (sim-scaled) units and
+        # must cover every replica; convert the pool's physical per-node
+        # limit accordingly. Striping makes per-home accounting approximate,
+        # so a physical MemoryError at alloc time still falls back to LOCAL.
+        plan_capacity = None
+        if pooled and self.store.nodes[0].capacity_bytes is not None:
+            plan_capacity = int(
+                self.store.nodes[0].capacity_bytes * self.sim_scale
+                / self.store.replication
+            )
+        plan = self.policy.plan(
+            catalog,
+            local_fraction=self.local_fraction,
+            n_nodes=self.store.n_nodes if pooled else 1,
+            node_capacity_bytes=plan_capacity,
+        )
         budget = plan.budget_bytes
 
+        kept_local: list[str] = []
         local_bytes = 0
         for name, lo in self._live.items():
             tier = plan.tier_of(name)
             if tier is Tier.REMOTE:
-                self.store.alloc(name, lo.data)
+                try:
+                    if pooled:
+                        # the plan's home node anchors the stripe walk
+                        self.store.alloc(name, lo.data,
+                                         home=plan.node_of.get(name))
+                    else:
+                        self.store.alloc(name, lo.data)
+                except MemoryError:
+                    # remote tier physically full: the object stays local
+                    # (pool.alloc rolled its extents back)
+                    tier = Tier.LOCAL
+                    kept_local.append(name)
+            if tier is Tier.REMOTE:
                 lo.data = None  # freed from local memory
                 self.metadata.register(
                     ObjectMeta(
@@ -156,6 +191,22 @@ class DolmaRuntime:
                         size_bytes=lo.obj.size_bytes,
                     )
                 )
+        if kept_local:
+            # reflect the physical fallback in the plan consumers see
+            tiers = dict(plan.tiers)
+            node_of = dict(plan.node_of)
+            fallback_bytes = 0
+            for name in kept_local:
+                tiers[name] = Tier.LOCAL
+                node_of.pop(name, None)
+                fallback_bytes += self._live[name].obj.size_bytes
+            plan = dataclasses.replace(
+                plan,
+                tiers=tiers,
+                node_of=node_of,
+                local_bytes=plan.local_bytes + fallback_bytes,
+                remote_bytes=plan.remote_bytes - fallback_bytes,
+            )
         self.local_region_bytes = local_bytes
         # Remaining budget is the RDMA-registered cache region (§4.2); always
         # keep at least one page so chunked transfer can make progress. The
@@ -227,17 +278,15 @@ class DolmaRuntime:
             self.clock.wait_until(self.timeline, done)  # access barrier
         remainder = max(size - covered, 0)
         if remainder > 0:
-            chunk = self._chunk_bytes()
-            res = self.store.resources[0]
-            obj = self.store._objects[name]
-            t = max(self.clock.now(self.timeline), obj.pending_write_until)
             mode = "windowed" if self.dual_buffer else "serial"
-            _s, done = res.issue_stream("read", remainder, chunk, t,
-                                        pipelined=mode)
+            done = self.store.stream_read(
+                name, nbytes=remainder, chunk_bytes=self._chunk_bytes(),
+                issue_at=self.clock.now(self.timeline), mode=mode,
+            )
             self.clock.wait_until(self.timeline, done)
         self._resident[name] = self._cache_share.get(name, 0)
         self._track_cache(lo.obj.size_bytes)
-        data = self.store._objects[name].data.copy()
+        data = self.store.payload(name)
         self._fetches_done_at = self.clock.now(self.timeline)
         return data
 
@@ -251,17 +300,12 @@ class DolmaRuntime:
             lo.data = np.array(array, copy=True)
             self.metadata.update(name, epoch=self._epoch, status=Status.PRESENT)
             return
-        chunk = self._chunk_bytes()
-        flat = array.reshape(-1)
         # async posted writes stream at line rate; the timeline doesn't wait
-        res = self.store.resources[0]
-        t = self.clock.now(self.timeline)
-        _s, end = res.issue_stream("write", meta.size_bytes, chunk, t,
-                                   pipelined=True)
-        obj = self.store._objects[name]
-        with obj.lock:
-            obj.data = np.array(flat, copy=True).reshape(obj.data.shape)
-            obj.pending_write_until = max(obj.pending_write_until, end)
+        end = self.store.stream_write(
+            name, array, chunk_bytes=self._chunk_bytes(),
+            issue_at=self.clock.now(self.timeline), mode="pipelined",
+            epoch=self._epoch, charge_bytes=meta.size_bytes,
+        )
         self.metadata.update(name, epoch=self._epoch, status=Status.DIRTY)
         # the local copy in the cache region is the freshest: stays resident
         self._resident[name] = self._cache_share.get(name, 0)
@@ -323,13 +367,13 @@ class DolmaRuntime:
         if covered <= 0:
             t = self.clock.now(self.timeline) if issue_at is None else issue_at
             return t, 0
-        res = self.store.resources[0]
-        obj = self.store._objects[name]
         t = self.clock.now(self.timeline) if issue_at is None else issue_at
-        t = max(t, obj.pending_write_until)
-        # posted async reads pipeline the RTT (Fig 9/10 mechanism)
-        _s, end = res.issue_stream("read", covered, max(covered // 8, 4096), t,
-                                   pipelined=True)
+        # posted async reads pipeline the RTT (Fig 9/10 mechanism); the store
+        # orders the stream after any pending write to the object (RAW)
+        end = self.store.stream_read(
+            name, nbytes=covered, chunk_bytes=max(covered // 8, 4096),
+            issue_at=t, mode="pipelined",
+        )
         return end, covered
 
     def _track_cache(self, nbytes: int) -> None:

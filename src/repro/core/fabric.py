@@ -224,6 +224,12 @@ class FabricResource:
         self.bytes_written = 0
         self.n_ops = 0
 
+    @property
+    def free_at(self) -> float:
+        """Sim-time this QP drains — the congestion signal routing reads."""
+        with self._lock:
+            return self._free_at
+
     def issue(self, kind: str, size_bytes: int, issue_time_us: float) -> tuple[float, float]:
         """Issue an op at ``issue_time_us``; returns (start, completion) times."""
         dur = (

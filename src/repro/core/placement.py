@@ -32,6 +32,12 @@ class PlacementPlan:
     remote_bytes: int
     peak_bytes: int
     budget_bytes: int
+    # remote object -> home memory-node id (multi-node pools); empty for the
+    # single-node remote tier
+    node_of: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    # memory-node id -> remote bytes homed there (stripe-period load balance)
+    node_load: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    n_nodes: int = 1
 
     @property
     def local_fraction(self) -> float:
@@ -51,6 +57,12 @@ class PlacementPlan:
     def local_names(self) -> list[str]:
         return [n for n, t in self.tiers.items() if t is not Tier.REMOTE]
 
+    def node_bytes(self) -> dict[int, int]:
+        """Remote bytes homed on each memory node (load-balance view)."""
+        out = {i: 0 for i in range(self.n_nodes)}
+        out.update(self.node_load)
+        return out
+
     def summary(self) -> dict:
         return {
             "peak_bytes": self.peak_bytes,
@@ -61,6 +73,7 @@ class PlacementPlan:
             "memory_saving": round(self.memory_saving, 4),
             "n_remote": len(self.remote_names()),
             "n_local": len(self.local_names()),
+            "n_nodes": self.n_nodes,
         }
 
 
@@ -93,8 +106,16 @@ class PlacementPolicy:
         *,
         local_fraction: float | None = None,
         local_budget_bytes: int | None = None,
+        n_nodes: int = 1,
+        node_capacity_bytes: int | None = None,
     ) -> PlacementPlan:
-        """Demote ranked objects until local usage fits the budget."""
+        """Demote ranked objects until local usage fits the budget.
+
+        With ``n_nodes > 1`` the plan also assigns each remote object a home
+        memory node, greedily least-loaded-first; ``node_capacity_bytes`` is
+        a hard per-node constraint — an object that fits on no node is kept
+        LOCAL (remote capacity, like local capacity, is finite at rack scale).
+        """
         peak = catalog.total_bytes
         if local_budget_bytes is None:
             if local_fraction is None:
@@ -102,11 +123,23 @@ class PlacementPolicy:
             local_budget_bytes = int(peak * local_fraction)
 
         tiers: dict[str, Tier] = {o.name: Tier.LOCAL for o in catalog}
+        node_of: dict[str, int] = {}
+        node_load: dict[int, int] = {i: 0 for i in range(n_nodes)}
         local_bytes = peak
         for obj in demotion_order(catalog):
             if not self.all_large_remote and local_bytes <= local_budget_bytes:
                 break
+            # home = least-loaded node with room (striping spreads the extents
+            # from here; the home-node load is the stripe-period anchor)
+            home = min(node_load, key=lambda i: (node_load[i], i))
+            if (
+                node_capacity_bytes is not None
+                and node_load[home] + obj.size_bytes > node_capacity_bytes
+            ):
+                continue  # no node can take it: stays local
             tiers[obj.name] = Tier.REMOTE
+            node_of[obj.name] = home
+            node_load[home] += obj.size_bytes
             local_bytes -= obj.size_bytes
 
         remote_bytes = peak - local_bytes
@@ -116,4 +149,7 @@ class PlacementPolicy:
             remote_bytes=remote_bytes,
             peak_bytes=peak,
             budget_bytes=local_budget_bytes,
+            node_of=node_of,
+            node_load=node_load,
+            n_nodes=n_nodes,
         )

@@ -1,0 +1,683 @@
+"""Multi-node remote memory pool: striping, replication, routing, recovery.
+
+The seed modeled DOLMA's remote tier as a single memory node. This module
+generalizes it to the rack-scale pool the disaggregation literature assumes
+(Maruf & Chowdhury's survey; Wahlgren et al.'s HPC adoption study): N memory
+nodes share one :class:`~repro.core.fabric.SimClock`, and a
+:class:`MemoryPool` fronts them behind the same read/write/fence/atomic API
+as a single :class:`~repro.core.remote_store.RemoteStore`, so every existing
+consumer (``DolmaRuntime``, the HPC workloads, the serving engine) can be
+pointed at a pool unchanged.
+
+Mechanisms:
+
+  * **striping** — each object is split into fixed-size *extents* laid out
+    round-robin from a deterministic home node; a large-object fetch issues
+    one read per extent on different nodes' QPs concurrently, so effective
+    bandwidth scales with node count (completion = max over nodes instead of
+    sum on one QP);
+  * **replication** — each extent is written to ``replication`` distinct
+    nodes; reads are served from the replica whose least-loaded QP frees up
+    earliest (read-from-least-loaded-replica);
+  * **congestion-aware routing** — every placement decision (replica choice,
+    QP choice within a node) keys on ``FabricResource.free_at``, the
+    discrete-event analogue of queue depth on a NIC;
+  * **failure injection + recovery** — :meth:`fail_node` kills a node at a
+    sim-time and drops its data; reads transparently fail over to surviving
+    replicas; :meth:`recover` re-replicates degraded extents from survivors
+    (charging read+write fabric time) or restores singly-homed extents from
+    a checkpoint blob set (the ``checkpoint.manager`` metadata path).
+
+Every transfer both moves real bytes (numpy) and charges the fabric model,
+so pool-backed workloads stay bit-exact against untiered oracles while the
+clock reflects rack-scale contention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from repro.core.fabric import (
+    FabricModel,
+    FabricResource,
+    INFINIBAND_100G,
+    SimClock,
+)
+from repro.core.remote_store import NodeFailure, RemoteStore
+
+DEFAULT_STRIPE_BYTES = 1 << 20  # 1 MiB extents (a few RDMA ops each)
+
+
+class ExtentLostError(RuntimeError):
+    """All replicas of an extent are gone and no recovery source was given."""
+
+
+def _home_of(name: str, n_nodes: int) -> int:
+    """Deterministic home node for an object (stable across runs/processes)."""
+    return zlib.crc32(name.encode()) % n_nodes
+
+
+@dataclasses.dataclass
+class Extent:
+    """One stripe of an object: ``nbytes`` starting at ``offset``."""
+
+    index: int
+    offset: int
+    nbytes: int
+    replicas: list[int]  # node ids holding a copy; order = placement order
+
+    def key(self, name: str) -> str:
+        return f"{name}#e{self.index}"
+
+
+@dataclasses.dataclass
+class PoolObject:
+    """Directory entry: where every extent of a logical object lives."""
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: np.dtype
+    nbytes: int
+    home: int
+    extents: list[Extent]
+
+
+class MemoryPool:
+    """N remote memory nodes behind a single-store API (drop-in for
+    :class:`RemoteStore` everywhere the runtime stack takes one)."""
+
+    def __init__(
+        self,
+        n_nodes: int = 2,
+        *,
+        clock: SimClock | None = None,
+        fabric: FabricModel = INFINIBAND_100G,
+        stripe_bytes: int = DEFAULT_STRIPE_BYTES,
+        replication: int = 1,
+        qps_per_node: int = 1,
+        node_capacity_bytes: int | None = None,
+    ) -> None:
+        if n_nodes < 1:
+            raise ValueError("n_nodes must be >= 1")
+        if replication < 1:
+            raise ValueError("replication must be >= 1")
+        if stripe_bytes < 4096:
+            raise ValueError("stripe_bytes must be >= 4096 (one page)")
+        self.clock = clock or SimClock()
+        self.fabric = fabric
+        self.stripe_bytes = stripe_bytes
+        self.replication = min(replication, n_nodes)
+        self.nodes = [
+            RemoteStore(
+                clock=self.clock,
+                fabric=fabric,
+                n_resources=qps_per_node,
+                node_id=i,
+                capacity_bytes=node_capacity_bytes,
+            )
+            for i in range(n_nodes)
+        ]
+        self._directory: dict[str, PoolObject] = {}
+        self._failures: list[dict] = []
+
+    # -- topology ----------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    def alive_nodes(self) -> list[RemoteStore]:
+        return [n for n in self.nodes if n.alive]
+
+    @property
+    def resources(self) -> list[FabricResource]:
+        """All QPs of all alive nodes (scheduler/runtime compatibility)."""
+        return [r for n in self.nodes if n.alive for r in n.resources]
+
+    def node_of_extent(self, name: str, index: int) -> list[int]:
+        return list(self._directory[name].extents[index].replicas)
+
+    # -- allocation ---------------------------------------------------------
+    def alloc(self, name: str, array: np.ndarray, *, home: int | None = None) -> None:
+        """Stripe ``array`` across the pool from its home node.
+
+        Extent *e* of an object homed at *h* has its primary on node
+        ``(h + e) % N`` and replicas on the following alive nodes — so a
+        full-object read touches every node once per stripe-period.
+        """
+        if name in self._directory:
+            raise ValueError(f"pool object {name!r} exists")
+        array = np.asarray(array)
+        flat = np.ascontiguousarray(array).reshape(-1).view(np.uint8)
+        alive = [n.node_id for n in self.alive_nodes()]
+        if not alive:
+            raise NodeFailure("no alive memory nodes in the pool")
+        h = home if home is not None else _home_of(name, self.n_nodes)
+        k = min(self.replication, len(alive))
+        extents: list[Extent] = []
+        placed: list[tuple[int, str]] = []  # (node_id, key) for rollback
+        try:
+            for idx, off in enumerate(
+                range(0, max(flat.nbytes, 1), self.stripe_bytes)
+            ):
+                chunk = flat[off : off + self.stripe_bytes]
+                # walk alive nodes starting at the striped primary
+                start = (h + idx) % len(alive)
+                replicas = [alive[(start + r) % len(alive)] for r in range(k)]
+                ext = Extent(index=idx, offset=off, nbytes=chunk.nbytes,
+                             replicas=replicas)
+                for node_id in replicas:
+                    self.nodes[node_id].alloc(ext.key(name), chunk)
+                    placed.append((node_id, ext.key(name)))
+                extents.append(ext)
+                if flat.nbytes == 0:
+                    break
+        except MemoryError:
+            # atomic alloc: a node running out of capacity mid-stripe must
+            # not leak orphan extents the directory doesn't know about
+            for node_id, key in placed:
+                self.nodes[node_id].free(key)
+            raise
+        self._directory[name] = PoolObject(
+            name=name,
+            shape=tuple(array.shape),
+            dtype=array.dtype,
+            nbytes=flat.nbytes,
+            home=h,
+            extents=extents,
+        )
+
+    def free(self, name: str) -> None:
+        po = self._directory.pop(name, None)
+        if po is None:
+            return
+        for ext in po.extents:
+            for node_id in ext.replicas:
+                self.nodes[node_id].free(ext.key(name))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._directory
+
+    def nbytes(self, name: str) -> int:
+        return self._directory[name].nbytes
+
+    def total_bytes(self) -> int:
+        """Logical bytes stored (replicas not double-counted)."""
+        return sum(po.nbytes for po in self._directory.values())
+
+    def physical_bytes(self) -> int:
+        """Bytes resident across nodes, replicas included."""
+        return sum(n.total_bytes() for n in self.nodes)
+
+    # -- routing ------------------------------------------------------------
+    def _live_replicas(self, name: str, ext: Extent) -> list[int]:
+        key = ext.key(name)
+        return [
+            nid for nid in ext.replicas
+            if self.nodes[nid].alive and key in self.nodes[nid]
+        ]
+
+    def _pick_replica(self, name: str, ext: Extent) -> tuple[RemoteStore, FabricResource]:
+        """Least-loaded live replica: minimize earliest-free-QP time."""
+        live = self._live_replicas(name, ext)
+        if not live:
+            raise ExtentLostError(
+                f"extent {ext.key(name)} lost: no live replica "
+                f"(had {ext.replicas}); run MemoryPool.recover()"
+            )
+        best = min(
+            (self.nodes[nid] for nid in live),
+            key=lambda node: (node.least_loaded_resource().free_at, node.node_id),
+        )
+        return best, best.least_loaded_resource()
+
+    def _node_shares(self, name: str) -> dict[int, int]:
+        """bytes served per node for a full read, after replica selection.
+
+        Replica choice must account for bytes this very transfer has already
+        assigned (all extents issue at the same sim-time, so ``free_at``
+        alone never advances between picks): otherwise, under replication,
+        every extent ties to the same lowest-id node and a striped read
+        collapses onto one QP.
+        """
+        po = self._directory[name]
+        line_bpus = (self.fabric.read_line_gbps or self.fabric.read_gbps) * 1e3
+        cost = {
+            n.node_id: n.least_loaded_resource().free_at
+            for n in self.alive_nodes()
+        }
+        shares: dict[int, int] = {}
+        for ext in po.extents:
+            live = self._live_replicas(name, ext)
+            if not live:
+                raise ExtentLostError(
+                    f"extent {ext.key(name)} lost: no live replica "
+                    f"(had {ext.replicas}); run MemoryPool.recover()"
+                )
+            nid = min(live, key=lambda i: (cost[i], i))
+            shares[nid] = shares.get(nid, 0) + ext.nbytes
+            cost[nid] += ext.nbytes / line_bpus  # projected queue growth
+        return shares
+
+    # -- data path ----------------------------------------------------------
+    def read(
+        self,
+        name: str,
+        *,
+        timeline: str = "main",
+        resource: FabricResource | None = None,
+        offset: int = 0,
+        nbytes: int | None = None,
+        issue_at_us: float | None = None,
+        sync: bool = True,
+    ) -> tuple[np.ndarray, float]:
+        """Striped one-sided read; returns (data, completion_time_us).
+
+        Every extent overlapping ``[offset, offset+nbytes)`` is read from its
+        least-loaded live replica; all extent reads are issued at the same
+        sim-time so distinct nodes' fabric resources run concurrently —
+        completion is the max over extents, which is what makes aggregate
+        bandwidth scale with node count.
+        """
+        po = self._directory[name]
+        if nbytes is None:
+            nbytes = po.nbytes - offset
+        t_issue = self.clock.now(timeline) if issue_at_us is None else issue_at_us
+        out = np.empty(nbytes, dtype=np.uint8)
+        end = t_issue
+        for ext in po.extents:
+            lo = max(offset, ext.offset)
+            hi = min(offset + nbytes, ext.offset + ext.nbytes)
+            if lo >= hi:
+                continue
+            node, qp = self._pick_replica(name, ext)
+            chunk, ext_end = node.read(
+                ext.key(name),
+                timeline=timeline,
+                resource=qp,
+                offset=lo - ext.offset,
+                nbytes=hi - lo,
+                issue_at_us=t_issue,
+                sync=False,
+            )
+            out[lo - offset : hi - offset] = chunk
+            end = max(end, ext_end)
+        if sync:
+            self.clock.wait_until(timeline, end)
+        return out, end
+
+    def read_object(
+        self, name: str, *, timeline: str = "main",
+        resource: FabricResource | None = None,
+    ) -> tuple[np.ndarray, float]:
+        """Fetch the whole object (shaped), synchronously."""
+        po = self._directory[name]
+        raw, end = self.read(name, timeline=timeline, resource=resource)
+        return raw.view(po.dtype).reshape(po.shape), end
+
+    def write(
+        self,
+        name: str,
+        array: np.ndarray,
+        *,
+        timeline: str = "main",
+        resource: FabricResource | None = None,
+        epoch: int | None = None,
+        sync: bool = False,
+    ) -> float:
+        """Striped one-sided write to *all* live replicas. Async by default."""
+        po = self._directory[name]
+        array = np.asarray(array)
+        if array.nbytes != po.nbytes:
+            raise ValueError(
+                f"size mismatch writing {name!r}: {array.nbytes} != {po.nbytes}"
+            )
+        flat = np.ascontiguousarray(array).reshape(-1).view(np.uint8)
+        t_issue = self.clock.now(timeline)
+        end = t_issue
+        for ext in po.extents:
+            chunk = flat[ext.offset : ext.offset + ext.nbytes]
+            live = self._live_replicas(name, ext)
+            if not live:
+                # match read semantics: a write to a lost extent must not
+                # silently report success
+                raise ExtentLostError(
+                    f"extent {ext.key(name)} lost: cannot write; "
+                    f"run MemoryPool.recover()"
+                )
+            for nid in live:
+                node = self.nodes[nid]
+                qp = node.least_loaded_resource()
+                _s, ext_end = qp.issue("write", ext.nbytes, t_issue)
+                node.commit_payload(ext.key(name), chunk,
+                                    pending_until=ext_end, epoch=epoch)
+                end = max(end, ext_end)
+        if sync:
+            self.clock.wait_until(timeline, end)
+        return end
+
+    def fence(self, names: Iterable[str] | None = None, *, timeline: str = "main") -> float:
+        """Wait for pending writes on all (or the given) logical objects."""
+        if names is None:
+            t = 0.0
+            for node in self.alive_nodes():
+                t = max(t, node.fence(timeline=timeline))
+            return self.clock.wait_until(timeline, t)
+        t = 0.0
+        for name in names:
+            po = self._directory.get(name)
+            if po is None:
+                continue  # freed concurrently — nothing to order against
+            for ext in po.extents:
+                key = ext.key(name)
+                for nid in ext.replicas:
+                    if self.nodes[nid].alive:
+                        t = max(t, self.nodes[nid].pending_until(key))
+        return self.clock.wait_until(timeline, t)
+
+    # -- stream accessors (DolmaRuntime's chunked fetch/commit path) --------
+    def payload(self, name: str) -> np.ndarray:
+        """Reassemble the object's current data (shaped); no fabric charge."""
+        po = self._directory[name]
+        out = np.empty(po.nbytes, dtype=np.uint8)
+        for ext in po.extents:
+            live = self._live_replicas(name, ext)
+            if not live:
+                raise ExtentLostError(
+                    f"extent {ext.key(name)} lost; run MemoryPool.recover()"
+                )
+            chunk = self.nodes[live[0]].payload(ext.key(name))
+            out[ext.offset : ext.offset + ext.nbytes] = chunk.reshape(-1).view(np.uint8)
+        return out.view(po.dtype).reshape(po.shape)
+
+    def pending_until(self, name: str) -> float:
+        po = self._directory.get(name)
+        if po is None:
+            return 0.0
+        t = 0.0
+        for ext in po.extents:
+            key = ext.key(name)
+            for nid in ext.replicas:
+                t = max(t, self.nodes[nid].pending_until(key))
+        return t
+
+    def least_loaded_resource(self) -> FabricResource:
+        res = self.resources
+        if not res:
+            raise NodeFailure("no alive memory nodes in the pool")
+        return min(res, key=lambda r: (r.free_at, r.name))
+
+    def stream_read(
+        self,
+        name: str,
+        *,
+        nbytes: int | None = None,
+        chunk_bytes: int,
+        issue_at: float,
+        mode: str = "windowed",
+        resource: FabricResource | None = None,
+    ) -> float:
+        """Charge a chunked read of ``nbytes``, striped across the pool.
+
+        The transfer is split over the nodes that would serve each extent
+        (replica-selected), proportionally to the bytes they hold; each
+        node's share streams on its least-loaded QP concurrently, so a
+        partial fetch pipelines over multiple nodes' fabric resources.
+        """
+        po = self._directory[name]
+        # nbytes may exceed the real po.nbytes under sim scaling (the caller
+        # charges modeled bytes); shares below are proportions, scale-free
+        size = po.nbytes if nbytes is None else nbytes
+        if size <= 0:
+            return issue_at
+        shares = self._node_shares(name)
+        total = sum(shares.values()) or 1
+        t0 = max(issue_at, self.pending_until(name))
+        end = t0
+        for nid in sorted(shares):
+            node_bytes = size * shares[nid] // total
+            if node_bytes <= 0:
+                continue
+            node = self.nodes[nid]
+            qp = node.least_loaded_resource()
+            _s, node_end = qp.issue_stream("read", node_bytes, chunk_bytes, t0,
+                                           pipelined=mode)
+            end = max(end, node_end)
+        return end
+
+    def stream_write(
+        self,
+        name: str,
+        array: np.ndarray,
+        *,
+        chunk_bytes: int,
+        issue_at: float,
+        mode: str = "pipelined",
+        epoch: int | None = None,
+        resource: FabricResource | None = None,
+        charge_bytes: int | None = None,
+    ) -> float:
+        """Chunked async write: each replica node streams its share once.
+
+        ``charge_bytes`` (sim-scaled callers) is split across nodes in
+        proportion to the real bytes each holds.
+        """
+        po = self._directory[name]
+        array = np.asarray(array)
+        if array.nbytes != po.nbytes:
+            raise ValueError(
+                f"size mismatch writing {name!r}: {array.nbytes} != {po.nbytes}"
+            )
+        total_charge = charge_bytes or po.nbytes
+        flat = np.ascontiguousarray(array).reshape(-1).view(np.uint8)
+        # group extents by replica node: one stream per node, then land data
+        per_node: dict[int, list[Extent]] = {}
+        for ext in po.extents:
+            live = self._live_replicas(name, ext)
+            if not live:
+                raise ExtentLostError(
+                    f"extent {ext.key(name)} lost: cannot write; "
+                    f"run MemoryPool.recover()"
+                )
+            for nid in live:
+                per_node.setdefault(nid, []).append(ext)
+        end = issue_at
+        for nid in sorted(per_node):
+            node = self.nodes[nid]
+            exts = per_node[nid]
+            node_bytes = sum(e.nbytes for e in exts)
+            node_charge = max(total_charge * node_bytes // max(po.nbytes, 1), 1)
+            qp = node.least_loaded_resource()
+            _s, node_end = qp.issue_stream("write", node_charge, chunk_bytes,
+                                           issue_at, pipelined=mode)
+            for ext in exts:
+                node.commit_payload(
+                    ext.key(name), flat[ext.offset : ext.offset + ext.nbytes],
+                    pending_until=node_end, epoch=epoch,
+                )
+            end = max(end, node_end)
+        return end
+
+    # -- atomics (routed by key hash over the *full* node list) --------------
+    def _atomic_node(self, key: str) -> RemoteStore:
+        """Home node of an atomic: hash over all N nodes, probing forward
+        past dead ones. Hashing over the alive list would remap every key
+        whenever unrelated membership changes — silently reading 0 from a
+        different node while the real counter sits on a healthy one."""
+        start = zlib.crc32(key.encode()) % self.n_nodes
+        for step in range(self.n_nodes):
+            node = self.nodes[(start + step) % self.n_nodes]
+            if node.alive:
+                return node
+        raise NodeFailure("no alive memory nodes in the pool")
+
+    def atomic_fetch_add(self, key: str, delta: int, *, timeline: str = "main") -> int:
+        return self._atomic_node(key).atomic_fetch_add(key, delta, timeline=timeline)
+
+    def atomic_cas(self, key: str, expected: int, new: int, *, timeline: str = "main") -> bool:
+        return self._atomic_node(key).atomic_cas(key, expected, new, timeline=timeline)
+
+    def atomic_read(self, key: str) -> int:
+        return self._atomic_node(key).atomic_read(key)
+
+    # -- failure injection + recovery ---------------------------------------
+    def fail_node(self, node_id: int, *, at_us: float | None = None,
+                  timeline: str = "main") -> None:
+        """Kill node ``node_id`` at sim-time (its extents are lost)."""
+        t = self.clock.now(timeline) if at_us is None else at_us
+        self.nodes[node_id].fail(at_us=t)
+        self._failures.append({"node": node_id, "at_us": t})
+
+    def degraded_extents(self) -> list[tuple[str, Extent]]:
+        """Extents with fewer live replicas than the pool's target k."""
+        out = []
+        k = min(self.replication, max(len(self.alive_nodes()), 1))
+        for name, po in self._directory.items():
+            for ext in po.extents:
+                if len(self._live_replicas(name, ext)) < k:
+                    out.append((name, ext))
+        return out
+
+    def recover(
+        self,
+        *,
+        timeline: str = "recovery",
+        from_blobs: Mapping[str, np.ndarray] | None = None,
+    ) -> dict:
+        """Rebuild degraded extents onto surviving nodes, charging sim time.
+
+        Each degraded extent is re-replicated up to the target k: copied from
+        a surviving replica (read on the source QP + write on the target QP,
+        both charged), or — when every replica died — restored from
+        ``from_blobs`` (a ``{name: array}`` checkpoint snapshot, e.g.
+        ``CheckpointManager.restore_store_blobs()``), charging the write leg.
+        Returns counters and the recovery makespan.
+        """
+        alive_ids = [n.node_id for n in self.alive_nodes()]
+        if not alive_ids:
+            raise NodeFailure("cannot recover: no alive memory nodes")
+        k = min(self.replication, len(alive_ids))
+        t0 = self.clock.now(timeline)
+        rebuilt = restored = skipped = 0
+        end = t0
+        for name, po in self._directory.items():
+            flat_blob: np.ndarray | None = None
+            for ext in po.extents:
+                live = self._live_replicas(name, ext)
+                full_targets: set[int] = set()  # nodes without room for it
+                while len(live) < k:
+                    target_id = min(
+                        (i for i in alive_ids
+                         if i not in live and i not in full_targets),
+                        key=lambda i: (self.nodes[i].stored_bytes(), i),
+                        default=None,
+                    )
+                    if target_id is None:
+                        # no node can take another replica (too few alive, or
+                        # the rest are at capacity): leave the extent at its
+                        # current replica count instead of aborting recovery
+                        if full_targets:
+                            skipped += 1
+                        break
+                    target = self.nodes[target_id]
+                    key = ext.key(name)
+                    if live:
+                        # copy from the least-loaded survivor: read then write
+                        src = self.nodes[min(
+                            live,
+                            key=lambda i: (
+                                self.nodes[i].least_loaded_resource().free_at, i
+                            ),
+                        )]
+                        read_end = src.stream_read(
+                            key, chunk_bytes=self.stripe_bytes,
+                            issue_at=self.clock.now(timeline), mode="pipelined",
+                        )
+                        data = src.payload(key)
+                        from_replica = True
+                    else:
+                        if from_blobs is None or name not in from_blobs:
+                            raise ExtentLostError(
+                                f"extent {key} has no live replica and no "
+                                f"checkpoint blob for {name!r}"
+                            )
+                        if flat_blob is None:
+                            blob = np.asarray(from_blobs[name])
+                            if blob.nbytes != po.nbytes:
+                                raise ValueError(
+                                    f"checkpoint blob for {name!r}: "
+                                    f"{blob.nbytes} B != {po.nbytes} B"
+                                )
+                            flat_blob = (
+                                np.ascontiguousarray(blob).reshape(-1).view(np.uint8)
+                            )
+                        data = flat_blob[ext.offset : ext.offset + ext.nbytes]
+                        # staging a checkpoint blob back in pays the write leg
+                        read_end = self.clock.now(timeline)
+                        from_replica = False
+                    try:
+                        target.alloc(key, data)
+                    except MemoryError:
+                        # target is at capacity: try the next candidate
+                        full_targets.add(target_id)
+                        continue
+                    if from_replica:
+                        rebuilt += 1
+                    else:
+                        restored += 1
+                    qp = target.least_loaded_resource()
+                    _s, w_end = qp.issue("write", ext.nbytes, read_end)
+                    target.commit_payload(key, data, pending_until=w_end)
+                    self.clock.wait_until(timeline, w_end)
+                    end = max(end, w_end)
+                    ext.replicas = [i for i in ext.replicas
+                                    if self.nodes[i].alive] + [target_id]
+                    live = self._live_replicas(name, ext)
+        return {
+            "rebuilt_extents": rebuilt,
+            "restored_extents": restored,
+            "skipped_extents": skipped,
+            "recovery_us": max(end - t0, 0.0),
+            "alive_nodes": len(alive_ids),
+        }
+
+    # -- checkpointing hooks -------------------------------------------------
+    def snapshot_objects(self) -> dict[str, np.ndarray]:
+        """Logical objects, reassembled (shaped) — CheckpointManager input."""
+        return {name: self.payload(name) for name in self._directory}
+
+    def restore_objects(self, blobs: dict[str, np.ndarray]) -> None:
+        """Repopulate from a checkpoint snapshot (no fabric charge, like
+        :meth:`RemoteStore.restore_objects`); unknown names are allocated."""
+        for name, data in blobs.items():
+            data = np.asarray(data)
+            if name in self._directory:
+                po = self._directory[name]
+                flat = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+                for ext in po.extents:
+                    chunk = flat[ext.offset : ext.offset + ext.nbytes]
+                    for nid in self._live_replicas(name, ext):
+                        self.nodes[nid].commit_payload(ext.key(name), chunk,
+                                                       pending_until=0.0)
+            else:
+                self.alloc(name, data)
+
+    # -- stats ---------------------------------------------------------------
+    def stats(self) -> dict:
+        per_node = [n.stats() for n in self.nodes]
+        return {
+            "bytes_read": sum(s["bytes_read"] for s in per_node),
+            "bytes_written": sum(s["bytes_written"] for s in per_node),
+            "n_ops": sum(s["n_ops"] for s in per_node),
+            "n_objects": len(self._directory),
+            "n_nodes": self.n_nodes,
+            "n_alive": len(self.alive_nodes()),
+            "replication": self.replication,
+            "stripe_bytes": self.stripe_bytes,
+            "logical_bytes": self.total_bytes(),
+            "physical_bytes": self.physical_bytes(),
+            "failures": list(self._failures),
+            "per_node": per_node,
+        }

@@ -23,6 +23,10 @@ import numpy as np
 from repro.core.fabric import FabricModel, FabricResource, INFINIBAND_100G, SimClock
 
 
+class NodeFailure(RuntimeError):
+    """Raised when an operation targets a memory node that has failed."""
+
+
 class RemoteObject:
     __slots__ = ("name", "data", "lock", "pending_write_until", "epoch")
 
@@ -43,30 +47,76 @@ class RemoteStore:
         clock: SimClock | None = None,
         fabric: FabricModel = INFINIBAND_100G,
         n_resources: int = 1,
+        node_id: int = 0,
+        capacity_bytes: int | None = None,
     ) -> None:
         self.clock = clock or SimClock()
         self.fabric = fabric
+        self.node_id = node_id
+        self.capacity_bytes = capacity_bytes
+        self.alive = True
+        self.failed_at_us: float | None = None
         self.resources = [FabricResource(self.clock, fabric) for _ in range(n_resources)]
         self._objects: dict[str, RemoteObject] = {}
         self._atomics: dict[str, int] = {}
+        self._used_bytes = 0  # running total; keeps capacity checks O(1)
         self._lock = threading.RLock()
+
+    # -- failure injection -------------------------------------------------
+    def fail(self, *, at_us: float = 0.0) -> None:
+        """Kill the node at sim-time ``at_us``: its data is lost and every
+        subsequent operation raises :class:`NodeFailure` (pool recovery
+        rebuilds lost extents from replicas or checkpoints)."""
+        with self._lock:
+            self.alive = False
+            self.failed_at_us = at_us
+            self._objects.clear()
+            self._atomics.clear()
+            self._used_bytes = 0
+
+    def _check_alive(self) -> None:
+        if not self.alive:
+            raise NodeFailure(
+                f"memory node {self.node_id} failed at t={self.failed_at_us}us"
+            )
 
     # -- allocation -------------------------------------------------------
     def alloc(self, name: str, array: np.ndarray) -> None:
+        self._check_alive()
         with self._lock:
             if name in self._objects:
                 raise ValueError(f"remote object {name!r} exists")
+            nbytes = np.asarray(array).nbytes
+            if (
+                self.capacity_bytes is not None
+                and self._used_bytes + nbytes > self.capacity_bytes
+            ):
+                raise MemoryError(
+                    f"node {self.node_id}: alloc {name!r} ({nbytes} B) exceeds "
+                    f"capacity {self.capacity_bytes} B "
+                    f"({self._used_bytes} B in use)"
+                )
             self._objects[name] = RemoteObject(name, np.array(array, copy=True))
+            self._used_bytes += nbytes
 
     def free(self, name: str) -> None:
         with self._lock:
-            self._objects.pop(name, None)
+            obj = self._objects.pop(name, None)
+            if obj is not None:
+                self._used_bytes -= obj.data.nbytes
 
     def __contains__(self, name: str) -> bool:
-        return name in self._objects
+        with self._lock:
+            return name in self._objects
 
     def nbytes(self, name: str) -> int:
-        return self._objects[name].data.nbytes
+        with self._lock:
+            return self._objects[name].data.nbytes
+
+    def stored_bytes(self) -> int:
+        """Physical bytes resident on this node (capacity accounting)."""
+        with self._lock:
+            return self._used_bytes
 
     def total_bytes(self) -> int:
         with self._lock:
@@ -90,7 +140,9 @@ class RemoteStore:
         write to the same object (the fabric's completion-queue ordering the
         paper relies on, §4.1 last para).
         """
-        obj = self._objects[name]
+        self._check_alive()
+        with self._lock:
+            obj = self._objects[name]
         res = resource or self.resources[0]
         t_issue = self.clock.now(timeline) if issue_at_us is None else issue_at_us
         t_issue = max(t_issue, obj.pending_write_until)  # RAW ordering
@@ -108,9 +160,11 @@ class RemoteStore:
         resource: FabricResource | None = None,
     ) -> tuple[np.ndarray, float]:
         """Fetch the whole object (shaped), synchronously."""
-        obj = self._objects[name]
+        with self._lock:
+            obj = self._objects[name]
+            dtype, shape = obj.data.dtype, obj.data.shape
         raw, end = self.read(name, timeline=timeline, resource=resource)
-        return raw.view(obj.data.dtype).reshape(obj.data.shape), end
+        return raw.view(dtype).reshape(shape), end
 
     def write(
         self,
@@ -123,7 +177,9 @@ class RemoteStore:
         sync: bool = False,
     ) -> float:
         """One-sided write. Async by default: data lands, timeline doesn't wait."""
-        obj = self._objects[name]
+        self._check_alive()
+        with self._lock:
+            obj = self._objects[name]
         if array.nbytes != obj.data.nbytes:
             raise ValueError(
                 f"size mismatch writing {name!r}: {array.nbytes} != {obj.data.nbytes}"
@@ -141,18 +197,109 @@ class RemoteStore:
         return end
 
     def fence(self, names: Iterable[str] | None = None, *, timeline: str = "main") -> float:
-        """Memory barrier: wait for pending writes (all, or the given set)."""
+        """Memory barrier: wait for pending writes (all, or the given set).
+
+        Names freed concurrently (or never allocated) are skipped — a fence
+        on a dead object has nothing left to order against.
+        """
         with self._lock:
             objs = (
                 list(self._objects.values())
                 if names is None
-                else [self._objects[n] for n in names]
+                else [self._objects[n] for n in names if n in self._objects]
             )
         t = max([o.pending_write_until for o in objs], default=0.0)
         return self.clock.wait_until(timeline, t)
 
+    # -- public stream/data accessors (shared with MemoryPool) --------------
+    def payload(self, name: str) -> np.ndarray:
+        """Copy of the object's current data (shaped); no fabric charge."""
+        with self._lock:
+            obj = self._objects[name]
+        with obj.lock:
+            return np.array(obj.data, copy=True)
+
+    def pending_until(self, name: str) -> float:
+        """Sim-time when the last async write to ``name`` lands (0 if none)."""
+        with self._lock:
+            obj = self._objects.get(name)
+        return obj.pending_write_until if obj is not None else 0.0
+
+    def least_loaded_resource(self) -> FabricResource:
+        """The QP that frees up earliest — congestion-aware routing target."""
+        return min(self.resources, key=lambda r: (r.free_at, r.name))
+
+    def stream_read(
+        self,
+        name: str,
+        *,
+        nbytes: int | None = None,
+        chunk_bytes: int,
+        issue_at: float,
+        mode: str = "windowed",
+        resource: FabricResource | None = None,
+    ) -> float:
+        """Charge a chunked read of ``nbytes`` of ``name``; return completion.
+
+        Orders after any pending async write (RAW). The caller owns the
+        timeline wait — this only occupies the fabric resource.
+        """
+        self._check_alive()
+        with self._lock:
+            obj = self._objects[name]
+        size = obj.data.nbytes if nbytes is None else nbytes
+        res = resource or self.least_loaded_resource()
+        t = max(issue_at, obj.pending_write_until)
+        _s, end = res.issue_stream("read", size, chunk_bytes, t, pipelined=mode)
+        return end
+
+    def stream_write(
+        self,
+        name: str,
+        array: np.ndarray,
+        *,
+        chunk_bytes: int,
+        issue_at: float,
+        mode: str = "pipelined",
+        epoch: int | None = None,
+        resource: FabricResource | None = None,
+        charge_bytes: int | None = None,
+    ) -> float:
+        """Chunked async write of the full object; lands data, returns end.
+
+        ``charge_bytes`` lets sim-scaled callers charge the fabric for the
+        modeled object size while landing the real (smaller) array.
+        """
+        self._check_alive()
+        with self._lock:
+            obj = self._objects[name]
+        array = np.asarray(array)
+        if array.nbytes != obj.data.nbytes:
+            raise ValueError(
+                f"size mismatch writing {name!r}: {array.nbytes} != {obj.data.nbytes}"
+            )
+        res = resource or self.least_loaded_resource()
+        _s, end = res.issue_stream("write", charge_bytes or array.nbytes,
+                                   chunk_bytes, issue_at, pipelined=mode)
+        self.commit_payload(name, array, pending_until=end, epoch=epoch)
+        return end
+
+    def commit_payload(
+        self, name: str, array: np.ndarray, *,
+        pending_until: float, epoch: int | None = None,
+    ) -> None:
+        """Land data whose fabric time was already charged elsewhere."""
+        with self._lock:
+            obj = self._objects[name]
+        with obj.lock:
+            obj.data = np.array(array, copy=True).reshape(obj.data.shape)
+            obj.pending_write_until = max(obj.pending_write_until, pending_until)
+            if epoch is not None:
+                obj.epoch = epoch
+
     # -- atomics for small shared objects (§4.1) ----------------------------
     def atomic_fetch_add(self, key: str, delta: int, *, timeline: str = "main") -> int:
+        self._check_alive()
         res = self.resources[0]
         t_issue = self.clock.now(timeline)
         _start, end = res.issue("atomic", 8, t_issue)
@@ -163,6 +310,7 @@ class RemoteStore:
             return old
 
     def atomic_cas(self, key: str, expected: int, new: int, *, timeline: str = "main") -> bool:
+        self._check_alive()
         res = self.resources[0]
         t_issue = self.clock.now(timeline)
         _start, end = res.issue("atomic", 8, t_issue)
@@ -186,15 +334,31 @@ class RemoteStore:
         with self._lock:
             for name, data in blobs.items():
                 if name in self._objects:
-                    self._objects[name].data = np.array(data, copy=True)
+                    old = self._objects[name]
+                    self._used_bytes += data.nbytes - old.data.nbytes
+                    old.data = np.array(data, copy=True)
                 else:
                     self._objects[name] = RemoteObject(name, np.array(data, copy=True))
+                    self._used_bytes += data.nbytes
 
     # -- stats ----------------------------------------------------------------
     def stats(self) -> dict:
+        with self._lock:
+            n_objects = len(self._objects)
         return {
             "bytes_read": sum(r.bytes_read for r in self.resources),
             "bytes_written": sum(r.bytes_written for r in self.resources),
             "n_ops": sum(r.n_ops for r in self.resources),
-            "n_objects": len(self._objects),
+            "n_objects": n_objects,
+            "alive": self.alive,
+            "per_resource": [
+                {
+                    "name": r.name,
+                    "bytes_read": r.bytes_read,
+                    "bytes_written": r.bytes_written,
+                    "n_ops": r.n_ops,
+                    "free_at_us": r.free_at,
+                }
+                for r in self.resources
+            ],
         }

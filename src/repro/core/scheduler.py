@@ -6,14 +6,23 @@ level: threads within a cluster coordinate through the cluster's shared
 queue (modeled by the resource's serialization) while keeping private local
 buffers.
 
+With a multi-node :class:`~repro.core.pool.MemoryPool` attached, a cluster
+maps to a *node preference* rather than a single QP: the cluster's ops land
+on its preferred node's least-loaded QP, failing over to the next alive node
+— congestion-aware routing at the cluster level (DESIGN.md §2–§3).
+
 The TPU-scale analogue (documented in DESIGN.md §2) is the mesh hierarchy:
 `pod` = cluster boundary over DCN, `data`/`model` = intra-cluster ICI.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 from repro.core.fabric import FabricModel, FabricResource, INFINIBAND_100G, SimClock
+
+if TYPE_CHECKING:  # import cycle guard: pool only needed for typing
+    from repro.core.pool import MemoryPool
 
 
 @dataclasses.dataclass
@@ -45,19 +54,29 @@ class TwoLevelScheduler:
         dual_buffer: bool = True,
         clock: SimClock | None = None,
         fabric: FabricModel = INFINIBAND_100G,
+        pool: "MemoryPool | None" = None,
     ) -> None:
         if n_threads < 1:
             raise ValueError("n_threads must be >= 1")
         if threads_per_cluster < 1:
             raise ValueError("threads_per_cluster must be >= 1")
-        self.clock = clock or SimClock()
+        if pool is not None and clock is not None and pool.clock is not clock:
+            raise ValueError("pool and scheduler must share one SimClock")
+        self.pool = pool
+        self.clock = (
+            pool.clock if pool is not None else (clock or SimClock())
+        )
         self.n_threads = n_threads
         self.threads_per_cluster = threads_per_cluster
         self.n_clusters = -(-n_threads // threads_per_cluster)
-        self.resources = [
-            FabricResource(self.clock, fabric, name=f"cluster{i}")
-            for i in range(self.n_clusters)
-        ]
+        if pool is None:
+            self.resources = [
+                FabricResource(self.clock, fabric, name=f"cluster{i}")
+                for i in range(self.n_clusters)
+            ]
+        else:
+            # clusters ride the pool's per-node QPs instead of private ones
+            self.resources = pool.resources
         per_thread = buffer_bytes // n_threads
         self.buffers = [
             ThreadBuffers(t, per_thread, dual=dual_buffer) for t in range(n_threads)
@@ -66,8 +85,27 @@ class TwoLevelScheduler:
     def cluster_of(self, thread_id: int) -> int:
         return thread_id // self.threads_per_cluster
 
+    def node_of_cluster(self, cluster: int) -> int:
+        """Preferred memory node of a cluster (pool mode only)."""
+        if self.pool is None:
+            raise ValueError("no MemoryPool attached")
+        alive = self.pool.alive_nodes()
+        if not alive:
+            raise ValueError("no alive memory nodes")
+        return alive[cluster % len(alive)].node_id
+
     def resource_of(self, thread_id: int) -> FabricResource:
-        return self.resources[self.cluster_of(thread_id)]
+        """The QP a thread's ops land on.
+
+        Single-node mode: the cluster's dedicated QP (the paper's §4.3
+        design). Pool mode: the *least-loaded QP of the cluster's preferred
+        node* — node preference spreads clusters over the pool, while the
+        earliest-``free_at`` pick absorbs transient congestion.
+        """
+        if self.pool is None:
+            return self.resources[self.cluster_of(thread_id)]
+        node_id = self.node_of_cluster(self.cluster_of(thread_id))
+        return self.pool.nodes[node_id].least_loaded_resource()
 
     def timeline(self, thread_id: int) -> str:
         return f"thread{thread_id}"
@@ -101,12 +139,14 @@ class TwoLevelScheduler:
 
         for t in range(n):
             tl = self.timeline(t)
-            res = self.resource_of(t)
             half = max(self.buffers[t].half_bytes, 1)
             covered = min(fetch_per_thread, half) if dual else 0
             pending_fetch_done = 0.0
             # iteration 0 fetch is never hidden
             for it in range(n_iters):
+                # re-routed every iteration: in pool mode this lands on the
+                # preferred node's least-loaded QP as congestion evolves
+                res = self.resource_of(t)
                 now = self.clock.now(tl)
                 if dual and it > 0:
                     # barrier on the prefetched (buffer-half-bounded) portion

@@ -1,5 +1,5 @@
 """The paper's eight evaluated workloads, implemented on DolmaRuntime."""
-from repro.hpc.base import HPCWorkload, WorkloadResult, run_workload
+from repro.hpc.base import HPCWorkload, WorkloadResult, pooled_runtime, run_workload
 from repro.hpc.bt import BT
 from repro.hpc.cg import CG
 from repro.hpc.ft import FT
@@ -20,6 +20,7 @@ WORKLOADS = {
     "miniAMR": MiniAMR,
 }
 
-__all__ = ["HPCWorkload", "WORKLOADS", "WorkloadResult", "run_workload"] + list(
-    WORKLOADS
-)
+__all__ = [
+    "HPCWorkload", "WORKLOADS", "WorkloadResult", "pooled_runtime",
+    "run_workload",
+] + list(WORKLOADS)

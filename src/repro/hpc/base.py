@@ -17,7 +17,9 @@ from typing import Any
 import numpy as np
 
 from repro.core.dual_buffer import DolmaRuntime
+from repro.core.fabric import FabricModel, INFINIBAND_100G
 from repro.core.objects import ObjectKind
+from repro.core.pool import MemoryPool
 
 MB = 1 << 20
 
@@ -70,6 +72,33 @@ class HPCWorkload:
     def charge(self, rt: DolmaRuntime) -> None:
         rt.charge_compute(flops=self.flops_per_iter,
                           bytes_touched=self.bytes_per_iter)
+
+
+def pooled_runtime(
+    n_nodes: int,
+    *,
+    local_fraction: float,
+    replication: int = 1,
+    stripe_bytes: int = 1 << 20,
+    qps_per_node: int = 1,
+    fabric: FabricModel = INFINIBAND_100G,
+    **runtime_kwargs: Any,
+) -> DolmaRuntime:
+    """A DolmaRuntime whose remote tier is an ``n_nodes`` memory pool.
+
+    Drop-in for ``DolmaRuntime(local_fraction=...)`` in any workload/benchmark:
+    the pool shares the runtime's clock, so elapsed times compose, and the
+    placement plan homes remote objects across nodes.
+    """
+    pool = MemoryPool(
+        n_nodes,
+        fabric=fabric,
+        stripe_bytes=stripe_bytes,
+        replication=replication,
+        qps_per_node=qps_per_node,
+    )
+    return DolmaRuntime(local_fraction=local_fraction, fabric=fabric,
+                        store=pool, **runtime_kwargs)
 
 
 def run_workload(

@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
 from repro.core.placement import PlacementPolicy
+from repro.core.pool import MemoryPool
 from repro.core.tiering import supports_host_offload
 from repro.models import get_model
 
@@ -28,6 +29,11 @@ class EngineConfig:
     max_len: int = 512
     hbm_budget_bytes: int | None = None   # None = no cache tiering pressure
     greedy: bool = True
+    # KV-cache overflow target: a multi-node memory pool. 0 = overflow is
+    # recorded in the plan only (seed behavior).
+    pool_nodes: int = 0
+    pool_replication: int = 1
+    pool_stripe_bytes: int = 1 << 20
 
 
 class ServingEngine:
@@ -39,7 +45,9 @@ class ServingEngine:
         self.cache = self.model.init_decode_cache(
             cfg, engine_cfg.max_batch, engine_cfg.max_len
         )
+        self.pool: MemoryPool | None = None
         self.placement = self._decide_cache_placement()
+        self._offload_overflow(initial=True)
         self._step = jax.jit(
             lambda params, cache, tok: self.model.decode_step(
                 params, cache, tok, self.cfg, moe_groups=1
@@ -64,13 +72,57 @@ class ServingEngine:
                 n_reads=1, n_writes=1,
             ))
         budget = self.ecfg.hbm_budget_bytes or catalog.total_bytes
-        plan = PlacementPolicy().plan(catalog, local_budget_bytes=budget)
+        plan = PlacementPolicy().plan(
+            catalog,
+            local_budget_bytes=budget,
+            n_nodes=max(self.ecfg.pool_nodes, 1),
+        )
         if plan.remote_names() and supports_host_offload():
             # On offload-capable backends, demoted cache objects would get
             # memory_kind="pinned_host"; the engine records the plan either
             # way so the decision is observable/testable.
             pass
         return plan
+
+    # -- KV-cache overflow -> memory pool -----------------------------------
+    def _cache_leaves(self, names: set[str] | None = None) -> dict[str, np.ndarray]:
+        """Host copies of cache leaves; ``names`` limits the device->host
+        transfer to the demoted tiers (the resident majority stays put)."""
+        out = {}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.cache):
+            name = "cache" + jax.tree_util.keystr(path)
+            if names is None or name in names:
+                out[name] = np.asarray(leaf)
+        return out
+
+    def _offload_overflow(self, *, initial: bool = False) -> None:
+        """Push demoted KV-cache objects to the multi-node pool.
+
+        First call allocates (striped, optionally replicated, homed per the
+        placement plan); later calls write back the current values
+        asynchronously — the serving analogue of DOLMA's async demotion.
+        """
+        if not self.ecfg.pool_nodes:
+            return
+        demoted = [n for n in self.placement.remote_names()
+                   if n.startswith("cache")]
+        if not demoted:
+            return
+        if self.pool is None:
+            self.pool = MemoryPool(
+                self.ecfg.pool_nodes,
+                replication=self.ecfg.pool_replication,
+                stripe_bytes=self.ecfg.pool_stripe_bytes,
+            )
+        leaves = self._cache_leaves(set(demoted))
+        for name in demoted:
+            if name in self.pool:
+                self.pool.write(name, leaves[name])  # async overflow write
+            else:
+                self.pool.alloc(name, leaves[name],
+                                home=self.placement.node_of.get(name))
+        if not initial:
+            self.pool.fence(demoted)
 
     def reset(self) -> None:
         """Clear the KV cache (fresh request wave)."""
@@ -104,6 +156,7 @@ class ServingEngine:
                 logits[:, :, : self.cfg.vocab_size], axis=-1
             ).astype(jnp.int32)
         self.cache = cache
+        self._offload_overflow()  # demoted cache tiers -> pool, async
         return np.concatenate(out, axis=1)[:B]
 
     def stats(self) -> dict:
@@ -112,4 +165,5 @@ class ServingEngine:
                 l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache)
             ),
             "placement": self.placement.summary(),
+            "pool": self.pool.stats() if self.pool is not None else None,
         }

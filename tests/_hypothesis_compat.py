@@ -1,0 +1,102 @@
+"""Use hypothesis when installed; otherwise a deterministic mini fallback.
+
+The seed test suite hard-imported ``hypothesis`` in three modules, aborting
+collection of the *entire* suite on machines without it. This shim keeps the
+property tests meaningful everywhere:
+
+  * with hypothesis installed (``pip install -e .[test]``), the real library
+    runs with shrinking, example databases, etc.;
+  * without it, ``@given`` degrades to a seeded pseudo-random sweep of
+    ``max_examples`` draws per test — no shrinking, but the same invariants
+    get exercised, and failures are reproducible (the RNG is seeded from the
+    test's qualified name, independent of PYTHONHASHSEED).
+
+Only the strategy surface the suite uses is implemented: ``integers``,
+``floats``, ``sampled_from``, ``lists``, ``data``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        """A draw function wrapped so strategies compose like hypothesis'."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+    class _Data:
+        """Stand-in for ``st.data()``'s interactive draw object."""
+
+        def __init__(self, rnd: random.Random):
+            self._rnd = rnd
+
+        def draw(self, strategy: _Strategy):
+            return strategy._draw(self._rnd)
+
+    class st:  # noqa: N801 — mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            seq = list(elements)
+            return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            return _Strategy(
+                lambda r: [elements._draw(r)
+                           for _ in range(r.randint(min_size, max_size))]
+            )
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _Strategy(lambda r: _Data(r))
+
+    def settings(*, max_examples: int = 20, **_ignored):
+        """Records max_examples on the (already @given-wrapped) function."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                # seeded by qualname: deterministic across runs & processes
+                rnd = random.Random(fn.__qualname__)
+                for _ in range(n):
+                    drawn = [s._draw(rnd) for s in arg_strategies]
+                    kw = {k: s._draw(rnd) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **kw)
+
+            # hide strategy-bound parameters from pytest's fixture resolver
+            # (hypothesis does the same): expose only the leading params the
+            # strategies don't fill — e.g. `self`.
+            params = list(inspect.signature(fn).parameters.values())
+            n_pos = len(params) - len(arg_strategies)
+            kept = [p for p in params[:n_pos] if p.name not in kw_strategies]
+            wrapper.__signature__ = inspect.Signature(kept)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,6 +1,6 @@
 """Fabric calibration (paper Fig 4 anchors), stream modes, scheduler."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     ETHERNET_25G,

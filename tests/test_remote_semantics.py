@@ -1,0 +1,146 @@
+"""Remote-memory semantics: RAW ordering, fences, multi-QP accounting.
+
+Covers the paper's §4.1/§4.2 contract on both the single-node RemoteStore
+and (where the contract is shared) the multi-node pool.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import MemoryPool, RemoteStore, SimClock
+
+KIB = 1 << 10
+MIB = 1 << 20
+
+
+class TestReadAfterWrite:
+    def test_read_waits_for_async_write(self):
+        store = RemoteStore()
+        store.alloc("x", np.zeros(64 * KIB))
+        end = store.write("x", np.ones(64 * KIB), timeline="writer")
+        data, t_read = store.read("x", timeline="reader")
+        assert t_read >= end
+        assert np.all(data.view(np.float64) == 1.0)
+
+    def test_stream_read_orders_after_pending_write(self):
+        store = RemoteStore()
+        store.alloc("x", np.zeros(64 * KIB))
+        w_end = store.stream_write("x", np.ones(64 * KIB),
+                                   chunk_bytes=16 * KIB, issue_at=0.0)
+        r_end = store.stream_read("x", chunk_bytes=16 * KIB, issue_at=0.0)
+        assert r_end > w_end
+
+    def test_pool_read_after_write(self):
+        pool = MemoryPool(3, stripe_bytes=16 * KIB, replication=2)
+        pool.alloc("x", np.zeros(64 * KIB, dtype=np.uint8))
+        pool.write("x", np.full(64 * KIB, 9, dtype=np.uint8), timeline="w")
+        data, _ = pool.read("x", timeline="r")
+        assert np.all(data == 9)
+
+
+class TestFence:
+    def test_fence_subset_waits_only_for_named(self):
+        clock = SimClock()
+        store = RemoteStore(clock=clock)
+        store.alloc("fast", np.zeros(4 * KIB))
+        store.alloc("slow", np.zeros(16 * MIB))
+        store.write("fast", np.ones(4 * KIB), timeline="w")
+        store.write("slow", np.ones(16 * MIB), timeline="w")
+        t_subset = store.fence(["fast"], timeline="a")
+        t_all = store.fence(timeline="b")
+        assert t_subset < t_all
+
+    def test_fence_skips_concurrently_freed_names(self):
+        store = RemoteStore()
+        store.alloc("x", np.zeros(4 * KIB))
+        store.free("x")
+        # seed behavior: KeyError; now a freed name has nothing to order on
+        assert store.fence(["x", "never-existed"]) == 0.0
+
+    def test_pool_fence_subset(self):
+        pool = MemoryPool(2, stripe_bytes=16 * KIB)
+        pool.alloc("x", np.zeros(64 * KIB, dtype=np.uint8))
+        end = pool.write("x", np.ones(64 * KIB, dtype=np.uint8))
+        t = pool.fence(["x", "ghost"], timeline="f")
+        assert t >= end
+
+
+class TestMultiResourceAccounting:
+    def test_stats_sum_and_break_down_by_qp(self):
+        store = RemoteStore(n_resources=3)
+        store.alloc("x", np.zeros(96 * KIB))
+        for res in store.resources:
+            store.read("x", resource=res, nbytes=32 * KIB)
+        s = store.stats()
+        assert s["bytes_read"] == 96 * KIB
+        assert [r["bytes_read"] for r in s["per_resource"]] == [32 * KIB] * 3
+        assert s["n_ops"] == sum(r["n_ops"] for r in s["per_resource"])
+
+    def test_write_accounting(self):
+        store = RemoteStore(n_resources=2)
+        store.alloc("x", np.zeros(64 * KIB))
+        store.write("x", np.ones(64 * KIB), resource=store.resources[1])
+        s = store.stats()
+        assert s["bytes_written"] == 64 * KIB * 8  # float64 object
+        assert s["per_resource"][0]["bytes_written"] == 0
+
+    def test_least_loaded_resource_tracks_free_at(self):
+        store = RemoteStore(n_resources=2)
+        store.alloc("x", np.zeros(4 * MIB))
+        busy = store.resources[0]
+        busy.issue("read", 32 * MIB, 0.0)
+        assert store.least_loaded_resource() is store.resources[1]
+
+
+class TestThreadSafety:
+    def test_concurrent_contains_nbytes_read_free(self):
+        """The seed raced unlocked __contains__/nbytes/read against free."""
+        store = RemoteStore()
+        errors = []
+
+        def churn(i):
+            try:
+                for k in range(200):
+                    name = f"t{i}_{k}"
+                    store.alloc(name, np.zeros(1 * KIB))
+                    assert name in store
+                    assert store.nbytes(name) == 1 * KIB * 8
+                    store.read(name, timeline=f"tl{i}")
+                    store.free(name)
+                    store.fence([name], timeline=f"tl{i}")
+            except Exception as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=churn, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+
+    def test_fence_all_with_concurrent_free(self):
+        store = RemoteStore()
+        for i in range(32):
+            store.alloc(f"o{i}", np.zeros(1 * KIB))
+        stop = threading.Event()
+
+        def freeer():
+            for i in range(32):
+                store.free(f"o{i}")
+            stop.set()
+
+        t = threading.Thread(target=freeer)
+        t.start()
+        while not stop.is_set():
+            store.fence(timeline="main")
+        t.join()
+
+
+def test_capacity_limit_enforced():
+    store = RemoteStore(capacity_bytes=8 * KIB)
+    store.alloc("a", np.zeros(4 * KIB, dtype=np.uint8))
+    with pytest.raises(MemoryError):
+        store.alloc("b", np.zeros(8 * KIB, dtype=np.uint8))
+    store.free("a")
+    store.alloc("b", np.zeros(8 * KIB, dtype=np.uint8))

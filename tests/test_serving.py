@@ -63,3 +63,35 @@ def test_cache_placement_under_budget(engine_setup):
     # generous budget => everything local
     eng2 = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
     assert eng2.stats()["placement"]["n_remote"] == 0
+
+
+def test_kv_overflow_targets_pool(engine_setup):
+    """Demoted KV-cache tiers are striped into the multi-node memory pool."""
+    cfg, _model, params = engine_setup
+    total = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+    eng = ServingEngine(
+        cfg, params,
+        EngineConfig(max_batch=2, max_len=64,
+                     hbm_budget_bytes=int(total * 0.2),
+                     pool_nodes=2, pool_replication=2,
+                     pool_stripe_bytes=64 * 1024),
+    )
+    demoted_cache = [n for n in eng.placement.remote_names()
+                     if n.startswith("cache")]
+    if not demoted_cache:
+        pytest.skip("budget did not demote any cache tier for this config")
+    assert eng.pool is not None
+    for name in demoted_cache:
+        assert name in eng.pool
+    before = eng.pool.stats()["bytes_written"]
+
+    eng.generate(np.array([[5, 9, 2]], np.int32), max_new=2)
+    after = eng.pool.stats()
+    # the post-wave overflow write-back really hit the pool's fabric
+    assert after["bytes_written"] > before
+    assert after["n_alive"] == 2
+    # pool holds the current cache values for every demoted tier
+    leaves = eng._cache_leaves()
+    for name in demoted_cache:
+        got = eng.pool.payload(name)
+        np.testing.assert_array_equal(got, np.asarray(leaves[name]))
