@@ -1,0 +1,165 @@
+"""Tiered-scan ablation: remat policy x prefetch x local_fraction.
+
+Models the per-step time of the unified layer scan (`core/tiering.tiered_scan`)
+the same way the paper models the dual buffer: remote weight fetches are
+charged to the calibrated fabric (`core/fabric.FabricModel`), compute to a
+flat sustained-FLOPs rate, and prefetch turns serial fetch+compute into a
+pipelined max() — posted asynchronous reads also run at the fabric's line
+rate rather than the single-outstanding-op rate (Fig 9/10's mechanism).
+
+The remote byte count per layer comes from a real `PlacementPlan` over a
+reduced granite-8b parameter tree at each local_fraction, so the sweep
+exercises the same policy the train step uses (`plan_for_params`).
+
+Remat accounting (sqrt-L blocked):
+  * compute: backward ~= 2x forward FLOPs + one forward recompute per block
+    pass (+ one more per-layer recompute at the inner level);
+  * fetches: prefetch-on carries the dual buffer inside the block boundary
+    -> 2 fetch passes (forward + block recompute), overlapped; prefetch-off
+    fetches on demand inside the per-layer boundary -> 3 serial passes;
+  * block boundaries: the first layer of each block cannot be prefetched
+    across the boundary (it would have to be saved), so prefetch-on pays
+    n_outer unoverlapped fetches;
+  * full_flat (per-layer remat, 1-layer blocks) has NO dual buffer — a
+    prefetch carry would be saved per layer — so `tiered_scan` compiles the
+    identical program either way and the model charges identical time
+    (speedup exactly 1.0 by construction).
+
+Expected shape: prefetch-on <= prefetch-off everywhere (equal for
+full_flat), with the gap growing as local_fraction shrinks (more remote
+bytes to hide).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.configs import get_config
+from repro.core.fabric import INFINIBAND_100G
+from repro.core.tiering import TieringConfig, _block_split, plan_for_params
+from repro.models import get_model
+
+from benchmarks.common import emit, save_json
+
+SUSTAINED_GFLOPS = 180e3   # ~TPU-v5e-class sustained matmul rate (GFLOP/s)
+CHUNK_BYTES = 4 << 20      # the paper's 4 MiB op anchor
+BATCH, SEQ = 8, 2048
+FRACTIONS = [1.0, 0.75, 0.5, 0.25, 0.1]
+REMATS = ["none", "full", "full_flat"]
+
+
+def _model_bytes_and_flops():
+    """Per-layer stacked-weight bytes + fwd FLOPs for FULL-scale granite-8b.
+
+    ``jax.eval_shape`` gives the abstract param tree without allocating the
+    8B-parameter model; the placement plan only needs shapes and dtypes.
+    """
+    cfg = get_config("granite-8b")
+    model = get_model(cfg)
+    params_abs = jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg), jax.random.key(0)
+    )
+    stacked = params_abs["layers"]
+    layer_bytes = sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(stacked)
+    ) // cfg.n_layers
+    # matmul-dominated fwd cost: 2 * tokens * (weight matmul params) per layer
+    layer_params = sum(l.size for l in jax.tree.leaves(stacked)) / cfg.n_layers
+    layer_flops = 2.0 * BATCH * SEQ * layer_params
+    return params_abs, cfg, layer_bytes, layer_flops
+
+
+def _remote_fraction(params_abs, local_fraction: float) -> float:
+    """Remote share of the *layer-stack* bytes under the real placement plan.
+
+    The tiered scan fetches only the stacked layer weights, so the fraction
+    that matters is computed over ``params["layers"]`` — embed/ln leaves are
+    placed too but never stream through the scan. Placement is whole-object
+    (one DataObject per stacked leaf), so the achieved remote share moves in
+    coarse steps as local_fraction shrinks; rows report the achieved value.
+    """
+    plan = plan_for_params(
+        params_abs, config=TieringConfig(local_fraction=local_fraction)
+    )
+    import jax.tree_util as jtu
+
+    remote = set(plan.remote_names())
+    total = rem_bytes = 0
+    for path, leaf in jtu.tree_leaves_with_path(params_abs):
+        name = "params" + jtu.keystr(path)
+        if "layers" not in name:
+            continue
+        nbytes = leaf.size * leaf.dtype.itemsize
+        total += nbytes
+        if name in remote:
+            rem_bytes += nbytes
+    return rem_bytes / max(total, 1)
+
+
+def step_time_us(n_layers: int, layer_bytes: int, layer_flops: float,
+                 remote_fraction: float, remat: str, prefetch: bool) -> float:
+    """Modeled train-step time of the tiered scan (fwd+bwd), microseconds."""
+    fabric = INFINIBAND_100G
+    fetch_bytes = int(layer_bytes * remote_fraction)
+    t_compute = layer_flops / (SUSTAINED_GFLOPS * 1e3)  # 1 GFLOP/s = 1e3 FLOP/us
+    if remat == "full_flat":
+        prefetch = False  # 1-layer blocks: tiered_scan has no dual buffer
+    mode = "pipelined" if prefetch else "serial"
+    t_fetch = fabric.stream_us("read", fetch_bytes, CHUNK_BYTES, mode=mode)
+
+    if remat == "none":
+        n_outer, n_inner = 1, n_layers
+        fetch_passes, compute_passes = 1.0, 3.0   # fwd + ~2x bwd, no recompute
+    elif remat == "full_flat":
+        n_outer, n_inner = n_layers, 1
+        fetch_passes = 2.0    # fwd + per-layer recompute
+        compute_passes = 4.0  # fwd + recompute + 2x bwd
+    else:  # sqrt-L blocked
+        n_outer, n_inner = _block_split(n_layers)
+        fetch_passes = 2.0 if prefetch else 3.0   # see module docstring
+        compute_passes = 5.0                      # fwd + 2 recomputes + 2x bwd
+    per_layer_compute = t_compute * compute_passes
+
+    if not prefetch:
+        # on-demand: every fetch pass serializes with compute
+        return n_layers * (t_fetch * fetch_passes + per_layer_compute)
+
+    # dual buffer: within a block, fetch k+1 overlaps compute k; the first
+    # fetch of each block (per pass) is exposed
+    per_pass_block = t_fetch + (n_inner - 1) * max(t_fetch, t_compute) \
+        + t_compute  # fill + steady state + drain of the last compute
+    exposed = n_outer * per_pass_block * fetch_passes
+    # compute not already counted inside the overlapped passes
+    leftover = n_layers * t_compute * max(compute_passes - fetch_passes, 0.0)
+    return exposed + leftover
+
+
+def run() -> dict:
+    params_abs, cfg, layer_bytes, layer_flops = _model_bytes_and_flops()
+    L = cfg.n_layers
+
+    rows: dict[str, dict] = {}
+    for frac in FRACTIONS:
+        rf = _remote_fraction(params_abs, frac)
+        for remat in REMATS:
+            key = f"local{frac:g}/{remat}"
+            on = step_time_us(L, layer_bytes, layer_flops, rf, remat, True)
+            off = step_time_us(L, layer_bytes, layer_flops, rf, remat, False)
+            rows[key] = {
+                "local_fraction": frac, "remote_fraction": round(rf, 4),
+                "remat": remat, "prefetch_on_us": on, "prefetch_off_us": off,
+                "speedup": off / max(on, 1e-9),
+            }
+            emit(f"fig_tiered_scan/{key}", on,
+                 f"off={off:.0f}us speedup={off / max(on, 1e-9):.2f}x "
+                 f"remote={rf:.2f}")
+            assert on <= off + 1e-6, (
+                f"prefetch-on slower than off at {key}: {on} > {off}"
+            )
+    save_json("fig_tiered_scan", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@ and writes structured JSON under benchmarks/results/.
   fig9  — dual-buffer ablation
   fig10 — CG problem-size scaling (DOLMA vs Oracle vs sync RDMA)
   fig_pool — multi-node pool: nodes x stripe x failure (bandwidth + recovery)
+  fig_tiered_scan — layer-scan ablation: remat x prefetch x local_fraction
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
 """
 from __future__ import annotations
@@ -28,6 +29,7 @@ def main() -> None:
         fig9_dualbuffer,
         fig10_problem_sizes,
         fig_pool_scaling,
+        fig_tiered_scan,
     )
 
     print("name,us_per_call,derived")
@@ -39,6 +41,7 @@ def main() -> None:
         ("fig9", fig9_dualbuffer),
         ("fig10", fig10_problem_sizes),
         ("fig_pool", fig_pool_scaling),
+        ("fig_tiered_scan", fig_tiered_scan),
     ]
     failures = 0
     for name, mod in modules:

@@ -43,9 +43,12 @@ def main() -> None:
     print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.0f}M "
           f"batch={args.batch} seq={args.seq}")
 
+    # DOLMA scan knobs flow from one TieringConfig (dual buffer stays on
+    # under remat: the fetch carry is recomputed inside the block boundary)
+    tiering = TieringConfig(prefetch=True, prefetch_under_remat=True)
     res = train(
         cfg,
-        TrainStepConfig(remat="full"),
+        TrainStepConfig.from_tiering(tiering, remat="full"),
         AdamWConfig(lr=3e-4, warmup_steps=20, decay_steps=args.steps),
         LoopConfig(
             steps=args.steps, batch=args.batch, seq=args.seq,

@@ -16,10 +16,15 @@ from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
 from repro.core.tiering import (
     TieringConfig,
+    blocked_remat_scan,
+    grad_safe_barrier,
     leaf_sharding,
     plan_for_params,
     prefetch_scan,
+    remote_carry_placer,
     supports_host_offload,
+    supports_host_offload_spmd,
+    tiered_scan,
 )
 
 __all__ = [
@@ -47,10 +52,15 @@ __all__ = [
     "Tier",
     "TieringConfig",
     "TwoLevelScheduler",
+    "blocked_remat_scan",
     "demotion_order",
+    "grad_safe_barrier",
     "leaf_sharding",
     "plan_for_params",
     "prefetch_scan",
+    "remote_carry_placer",
     "run_iterative",
     "supports_host_offload",
+    "supports_host_offload_spmd",
+    "tiered_scan",
 ]

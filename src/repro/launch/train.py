@@ -36,6 +36,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--remat", default="full",
                     help="none|full|full_flat|dots|dots_no_batch")
+    ap.add_argument("--no-prefetch-under-remat", action="store_true",
+                    help="disable the dual buffer inside remat boundaries "
+                         "(pre-unification behaviour; overlap left to XLA)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--moment-style", default="f32", choices=["f32", "bf16", "int8"])
     ap.add_argument("--compress-grads", action="store_true")
@@ -65,6 +68,7 @@ def main() -> None:
     step_cfg = TrainStepConfig(
         remat=args.remat,
         microbatches=args.microbatches,
+        prefetch_under_remat=not args.no_prefetch_under_remat,
         compression=CompressionConfig(enabled=args.compress_grads),
     )
     opt_cfg = AdamWConfig(lr=args.lr, moment_style=args.moment_style,

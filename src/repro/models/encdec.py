@@ -16,17 +16,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.tiering import blocked_remat_scan, prefetch_scan
 from repro.models import layers as L
 from repro.models.sharding import constrain
-from repro.models.transformer import REMAT_POLICIES, _maybe_remat
+from repro.models.transformer import scan_stacked_layers
 
 
-def _scan_layers(fn, carry, stacked, n, remat, prefetch):
-    if remat == "none":
-        return prefetch_scan(fn, carry, stacked, n_layers=n, prefetch=prefetch)
-    return blocked_remat_scan(fn, carry, stacked, n_layers=n,
-                              policy=REMAT_POLICIES[remat])
+def _scan_layers(fn, carry, stacked, n, remat, prefetch,
+                 prefetch_under_remat=True):
+    return scan_stacked_layers(fn, carry, stacked, n, remat=remat,
+                               prefetch=prefetch,
+                               prefetch_under_remat=prefetch_under_remat)
 
 Params = dict[str, Any]
 
@@ -63,9 +62,8 @@ def init_params(key, cfg: ModelConfig) -> Params:
 
 
 def encode(params, frames: jax.Array, cfg: ModelConfig, *, remat="none",
-           prefetch=True) -> jax.Array:
+           prefetch=True, prefetch_under_remat=True) -> jax.Array:
     """frames: (B, F, d) stub embeddings -> encoder output (B, F, d)."""
-    prefetch = prefetch and remat == "none"  # see transformer._run_trunk
     B, F, _ = frames.shape
     positions = jnp.broadcast_to(jnp.arange(F), (B, F))
     x = constrain(frames.astype(cfg.dtype), "batch", "seq_sp", None)
@@ -77,15 +75,15 @@ def encode(params, frames: jax.Array, cfg: ModelConfig, *, remat="none",
         return constrain(c, "batch", "seq_sp", None)
 
     x = _scan_layers(layer, x, params["enc_layers"], cfg.n_encoder_layers,
-                     remat, prefetch)
+                     remat, prefetch, prefetch_under_remat)
     return L.rmsnorm(params["ln_enc"], x)
 
 
 def forward(params, batch, cfg: ModelConfig, *, remat="none", prefetch=True,
-            **_kw):
+            prefetch_under_remat=True, **_kw):
     """batch: frames (B,F,d), tokens (B,S). Returns (logits, aux=0)."""
-    enc = encode(params, batch["frames"], cfg, remat=remat, prefetch=prefetch)
-    prefetch = prefetch and remat == "none"  # see transformer._run_trunk
+    enc = encode(params, batch["frames"], cfg, remat=remat, prefetch=prefetch,
+                 prefetch_under_remat=prefetch_under_remat)
     tokens = batch["tokens"]
     B, S = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
@@ -101,14 +99,15 @@ def forward(params, batch, cfg: ModelConfig, *, remat="none", prefetch=True,
         return constrain(c, "batch", "seq_sp", None)
 
     x = _scan_layers(layer, x, params["dec_layers"], cfg.n_layers,
-                     remat, prefetch)
+                     remat, prefetch, prefetch_under_remat)
     x = L.rmsnorm(params["ln_f"], x)
     return L.logits(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
 
 
 def loss_fn(params, batch, cfg: ModelConfig, *, remat="full", prefetch=True,
-            **_kw):
-    logits, aux = forward(params, batch, cfg, remat=remat, prefetch=prefetch)
+            prefetch_under_remat=True, **_kw):
+    logits, aux = forward(params, batch, cfg, remat=remat, prefetch=prefetch,
+                          prefetch_under_remat=prefetch_under_remat)
     nll = L.cross_entropy(
         logits[:, :-1].astype(jnp.float32), batch["labels"][:, 1:]
     )

@@ -10,9 +10,12 @@ Public API (uniform across dense / moe / ssm / hybrid / vlm; encdec lives in
   decode_step(params, cache, tokens, cfg)  -> (logits, cache)
 
 Layers are *stacked* (leading dim = n_layers) and driven by
-:func:`repro.core.tiering.prefetch_scan` — the compiled form of DOLMA's
+:func:`repro.core.tiering.tiered_scan` — the compiled form of DOLMA's
 dual-buffer: layer k+1's weights are fetched (device copy / all-gather,
-depending on their tier/sharding) while layer k computes.
+depending on their tier/sharding) while layer k computes. The dual buffer
+composes with rematerialization (the fetch carry lives inside the block-level
+remat boundary, so gathered weights are recomputed rather than saved); the
+old "prefetch only when remat is off" caveat is retired (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -23,12 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.tiering import blocked_remat_scan, prefetch_scan
+from repro.core.tiering import remote_carry_placer, tiered_scan
 from repro.models import layers as L
 from repro.models import mla as MLA
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.sharding import constrain
+from repro.models.sharding import constrain, current_mesh, resolve_spec
 
 Params = dict[str, Any]
 
@@ -43,7 +46,50 @@ REMAT_POLICIES = {
 def _maybe_remat(fn, remat: str):
     if remat == "none":
         return fn
-    return jax.checkpoint(fn, policy=REMAT_POLICIES[remat])
+    base = remat.removesuffix("_flat")  # '<policy>_flat' -> '<policy>'
+    return jax.checkpoint(fn, policy=REMAT_POLICIES[base])
+
+
+def _activation_carry_placer():
+    """remote_carry_fn for the layer scan's saved block carries.
+
+    Under a mesh, saved activation carries are constrained to their logical
+    (batch/seq-sharded) spec — with ``memory_kind="pinned_host"`` where the
+    backend's SPMD partitioner accepts it — so persistent activation memory
+    follows the same tier budget as weights (DESIGN.md §2).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+
+    def spec_fn(leaf):
+        names = ("batch", "seq_sp") + (None,) * (leaf.ndim - 2)
+        return resolve_spec(leaf.shape, names, mesh)
+
+    return remote_carry_placer(mesh, spec_fn=spec_fn)
+
+
+def scan_stacked_layers(fn, carry, stacked, n_layers: int, *, remat: str,
+                        prefetch: bool, prefetch_under_remat: bool = True):
+    """Map a remat policy string onto :func:`tiered_scan` (shared w/ encdec).
+
+    ``remat`` ∈ REMAT_POLICIES keys, optionally suffixed ``_flat``:
+    '<policy>_flat' = single-level per-layer remat — one fwd + one recompute
+    (vs sqrt-L's two) — fewer recomputed collectives at the cost of O(L)
+    saved carries; pick via microbatching headroom (§Perf).
+    """
+    if remat == "none":
+        return tiered_scan(fn, carry, stacked, n_layers=n_layers,
+                           prefetch=prefetch)
+    flat = remat.endswith("_flat")
+    base = remat.removesuffix("_flat")
+    return tiered_scan(
+        fn, carry, stacked, n_layers=n_layers, remat=True,
+        policy=REMAT_POLICIES[base],
+        prefetch=prefetch and prefetch_under_remat,
+        min_layers=10 ** 9 if flat else 12,
+        remote_carry_fn=_activation_carry_placer(),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -162,31 +208,23 @@ def _embed_inputs(params, batch, cfg: ModelConfig):
 
 
 def _run_trunk(params, x, positions, cfg: ModelConfig, *, remat: str,
-               prefetch: bool, moe_groups: int | None = None):
+               prefetch: bool, prefetch_under_remat: bool = True,
+               moe_groups: int | None = None):
     """Scan the stacked layers; returns (hidden, aux_loss).
 
     Dual-buffer note: the explicit prefetch carry (layer k+1's weights fetched
-    while layer k computes) is only used when remat is off — under remat the
-    carried gathered weights would be saved for backward for EVERY layer,
-    defeating FSDP/offload. With remat on, the fetch happens inside the remat
-    boundary and the overlap is realized by XLA's collective pipeliner /
-    latency-hiding scheduler instead (DESIGN.md §2).
+    while layer k computes) composes with remat — inside the block-level remat
+    boundary the carried gathered weights are recomputed for backward, not
+    saved, so prefetch no longer defeats FSDP/offload (DESIGN.md §2).
+    ``prefetch_under_remat=False`` restores the old behaviour (overlap left
+    to XLA's collective pipeliner / latency-hiding scheduler).
     """
-    prefetch = prefetch and remat == "none"
     aux0 = jnp.zeros((), jnp.float32)
 
     def scan_layers(fn, carry, stacked, n):
-        if remat == "none":
-            return prefetch_scan(fn, carry, stacked, n_layers=n,
-                                 prefetch=prefetch)
-        # '<policy>_flat' = single-level per-layer remat: one fwd + one
-        # recompute (vs sqrt-L's two) — fewer recomputed collectives at the
-        # cost of O(L) saved carries; pick via microbatching headroom (§Perf)
-        base, _, flat = remat.partition("_")
-        return blocked_remat_scan(
-            fn, carry, stacked, n_layers=n,
-            policy=REMAT_POLICIES[base],
-            min_layers=10 ** 9 if flat == "flat" else 12,
+        return scan_stacked_layers(
+            fn, carry, stacked, n, remat=remat, prefetch=prefetch,
+            prefetch_under_remat=prefetch_under_remat,
         )
 
     if cfg.family in ("dense", "vlm"):
@@ -246,6 +284,7 @@ def forward(
     *,
     remat: str = "none",
     prefetch: bool = True,
+    prefetch_under_remat: bool = True,
     moe_groups: int | None = None,
     return_hidden: bool = False,
 ):
@@ -253,7 +292,9 @@ def forward(
     x, positions = _embed_inputs(params, batch, cfg)
     x = constrain(x, "batch", "seq_sp", None)
     x, aux = _run_trunk(params, x, positions, cfg, remat=remat,
-                        prefetch=prefetch, moe_groups=moe_groups)
+                        prefetch=prefetch,
+                        prefetch_under_remat=prefetch_under_remat,
+                        moe_groups=moe_groups)
     x = L.rmsnorm(params["ln_f"], x)
     if cfg.family == "vlm":  # only text positions produce logits
         x = x[:, batch["patches"].shape[1]:]
@@ -270,6 +311,7 @@ def loss_fn(
     *,
     remat: str = "full",
     prefetch: bool = True,
+    prefetch_under_remat: bool = True,
     aux_weight: float = 0.01,
     mtp_weight: float = 0.1,
     moe_groups: int | None = None,
@@ -277,6 +319,7 @@ def loss_fn(
     """Next-token cross-entropy (+ MoE aux + MTP losses)."""
     want_hidden = bool(cfg.mtp_depth and "mtp" in params)
     out = forward(params, batch, cfg, remat=remat, prefetch=prefetch,
+                  prefetch_under_remat=prefetch_under_remat,
                   moe_groups=moe_groups, return_hidden=want_hidden)
     logits, aux = out[0], out[1]
     labels = batch["labels"]

@@ -27,8 +27,21 @@ class TrainStepConfig:
     remat: str = "full"
     microbatches: int = 1
     prefetch: bool = True          # dual-buffer layer-weight prefetch
+    # keep the dual buffer on under remat (fetch carry inside the block
+    # boundary: recomputed, not saved) — mirrors TieringConfig's knob
+    prefetch_under_remat: bool = True
     moe_groups: int | None = None
     compression: CompressionConfig = CompressionConfig()
+
+    @classmethod
+    def from_tiering(cls, tiering, **overrides) -> "TrainStepConfig":
+        """Step config whose scan knobs follow a :class:`TieringConfig`."""
+        kw = dict(
+            prefetch=tiering.prefetch,
+            prefetch_under_remat=tiering.prefetch_under_remat,
+        )
+        kw.update(overrides)
+        return cls(**kw)
 
 
 def make_train_step(model_cfg: ModelConfig, step_cfg: TrainStepConfig,
@@ -41,6 +54,7 @@ def make_train_step(model_cfg: ModelConfig, step_cfg: TrainStepConfig,
             params, batch, model_cfg,
             remat=step_cfg.remat,
             prefetch=step_cfg.prefetch,
+            prefetch_under_remat=step_cfg.prefetch_under_remat,
             moe_groups=step_cfg.moe_groups,
         )
 
