@@ -1,0 +1,133 @@
+"""Trace-driven prefetch pipeline: window x local-fraction x pool-nodes sweep.
+
+Compares the PR's trace-driven pipeline (predicted-order sliding window,
+streaming-tail overlap, Belady-from-trace retention, batched scatter-gather
+pool reads) against the cross-iteration dual-buffer prefetch it replaces,
+on both calibrated fabrics. Every cell's checksum is asserted bit-identical
+to the untiered oracle.
+
+Headline (asserted): at local fractions <= 0.25, at least 4 of the 8 HPC
+workloads run >= 1.5x faster than the legacy prefetch in some swept cell.
+The win concentrates where the paper's §6.1.1 slowdown lives — small local
+fractions, and the commodity 25G fabric where latency hiding decides
+viability (Wahlgren et al.); XSBench (no compute to hide under) and the
+InfiniBand mem-bound cells honestly show the smaller residual gains.
+"""
+from __future__ import annotations
+
+from repro.core.dual_buffer import DolmaRuntime
+from repro.core.fabric import ETHERNET_25G, INFINIBAND_100G
+from repro.core.placement import PlacementPolicy
+from repro.hpc import WORKLOADS, pooled_runtime, run_workload
+
+from benchmarks.common import emit, save_json
+
+SCALE = 0.2
+SIM_SCALE = 1000.0 / SCALE
+N_ITERS = 16          # amortizes the warmup-trace iteration
+FRACTIONS = [0.01, 0.05, 0.25]
+POOL_NODES = [2, 4]
+WINDOWS = [1, 2, 8]   # ablation vs the default window of 4
+FABRICS = {"ib": INFINIBAND_100G, "eth": ETHERNET_25G}
+SPEEDUP_TARGET = 1.5
+MIN_WORKLOADS = 4
+
+
+def _runtime(frac, fabric, *, nodes=1, **kw):
+    kw.setdefault("sim_scale", SIM_SCALE)
+    kw.setdefault("policy", PlacementPolicy(all_large_remote=True))
+    if nodes > 1:
+        return pooled_runtime(nodes, local_fraction=frac, fabric=fabric, **kw)
+    return DolmaRuntime(local_fraction=frac, fabric=fabric, **kw)
+
+
+def _cell(cls, oracle_checksum, frac, fabric, *, nodes=1, window=4):
+    base = run_workload(cls(scale=SCALE, seed=3),
+                        _runtime(frac, fabric, nodes=nodes, dual_buffer=True),
+                        N_ITERS)
+    pipe = run_workload(cls(scale=SCALE, seed=3),
+                        _runtime(frac, fabric, nodes=nodes, pipeline=True,
+                                 prefetch_window=window),
+                        N_ITERS)
+    assert base.checksum == oracle_checksum, "legacy checksum mismatch"
+    assert pipe.checksum == oracle_checksum, "pipeline checksum mismatch"
+    return {
+        "fraction": frac,
+        "nodes": nodes,
+        "window": window,
+        "legacy_us": base.elapsed_us,
+        "pipeline_us": pipe.elapsed_us,
+        "speedup": base.elapsed_us / max(pipe.elapsed_us, 1e-9),
+        "trace_hits": pipe.stats["prefetch"]["trace_hits"],
+        "trace_misses": pipe.stats["prefetch"]["trace_misses"],
+        "batched_reads": pipe.stats["prefetch"]["batched_reads"],
+        "evictions": pipe.stats["prefetch"]["evictions"],
+    }
+
+
+def run() -> dict:
+    oracles = {}
+    for name, cls in WORKLOADS.items():
+        oracles[name] = run_workload(
+            cls(scale=SCALE, seed=3),
+            DolmaRuntime(local_fraction=1.0, sim_scale=SIM_SCALE), N_ITERS,
+        ).checksum
+
+    table: dict[str, dict] = {}
+    best: dict[str, float] = {}
+    for name, cls in WORKLOADS.items():
+        rows = []
+        # fraction sweep, single remote node, both fabrics
+        for fab_name, fabric in FABRICS.items():
+            for frac in FRACTIONS:
+                r = _cell(cls, oracles[name], frac, fabric)
+                r["fabric"] = fab_name
+                rows.append(r)
+        # pool-node sweep (commodity fabric, where batching decides)
+        for nodes in POOL_NODES:
+            for frac in (0.05, 0.25):
+                r = _cell(cls, oracles[name], frac, ETHERNET_25G, nodes=nodes)
+                r["fabric"] = "eth"
+                rows.append(r)
+        table[name] = {"rows": rows}
+        best[name] = max(r["speedup"] for r in rows if r["fraction"] <= 0.25)
+        emit(f"fig_pipeline/{name}", 0.0,
+             f"best_speedup={best[name]:.2f}x "
+             f"cells={len(rows)}")
+
+    # window ablation on one balanced and one mem-bound workload
+    ablation = {}
+    for name, fabric, fab_name in (("CG", INFINIBAND_100G, "ib"),
+                                   ("MG", ETHERNET_25G, "eth")):
+        ablation[name] = []
+        for window in WINDOWS:
+            r = _cell(WORKLOADS[name], oracles[name], 0.05, fabric,
+                      window=window)
+            r["fabric"] = fab_name
+            ablation[name].append(r)
+        spread = [f"w{r['window']}={r['speedup']:.2f}x"
+                  for r in ablation[name]]
+        emit(f"fig_pipeline/window_{name}", 0.0, " ".join(spread))
+
+    winners = sorted(n for n, s in best.items() if s >= SPEEDUP_TARGET)
+    emit("fig_pipeline/headline", 0.0,
+         f"workloads_ge_{SPEEDUP_TARGET}x={len(winners)}/8 ({','.join(winners)})")
+    assert len(winners) >= MIN_WORKLOADS, (
+        f"pipeline speedup >= {SPEEDUP_TARGET}x reached on only "
+        f"{len(winners)}/8 workloads: {best}"
+    )
+
+    payload = {
+        "table": table,
+        "window_ablation": ablation,
+        "best_speedup": best,
+        "winners": winners,
+        "n_iters": N_ITERS,
+        "scale": SCALE,
+    }
+    save_json("fig_pipeline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

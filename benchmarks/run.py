@@ -11,16 +11,84 @@ and writes structured JSON under benchmarks/results/.
   fig10 — CG problem-size scaling (DOLMA vs Oracle vs sync RDMA)
   fig_pool — multi-node pool: nodes x stripe x failure (bandwidth + recovery)
   fig_tiered_scan — layer-scan ablation: remat x prefetch x local_fraction
+  fig_pipeline — trace-driven prefetch: window x fraction x nodes sweep
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
+
+``--bench-json [PATH]`` runs a fast per-workload baseline (oracle vs legacy
+prefetch vs trace pipeline, simulated elapsed_us + real wall-clock) and
+writes it to PATH (default BENCH_pr3.json) so later PRs have a perf
+trajectory to compare against.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
 
 
+def bench_json(path: str) -> dict:
+    """Per-workload perf baseline: simulated elapsed + real wall-clock."""
+    from repro.core.dual_buffer import DolmaRuntime
+    from repro.core.placement import PlacementPolicy
+    from repro.hpc import WORKLOADS, run_workload
+
+    scale = 0.2
+    sim_scale = 1000.0 / scale
+    fraction = 0.05
+    n_iters = 10
+
+    def tiered(**kw):
+        return DolmaRuntime(local_fraction=fraction, sim_scale=sim_scale,
+                            policy=PlacementPolicy(all_large_remote=True),
+                            **kw)
+
+    out: dict = {"config": {"scale": scale, "local_fraction": fraction,
+                            "n_iters": n_iters}, "workloads": {}}
+    t_all = time.time()
+    for name, cls in WORKLOADS.items():
+        t0 = time.time()
+        oracle = run_workload(cls(scale=scale, seed=3),
+                              DolmaRuntime(local_fraction=1.0,
+                                           sim_scale=sim_scale), n_iters)
+        legacy = run_workload(cls(scale=scale, seed=3),
+                              tiered(dual_buffer=True), n_iters)
+        pipe = run_workload(cls(scale=scale, seed=3),
+                            tiered(pipeline=True), n_iters)
+        assert legacy.checksum == oracle.checksum
+        assert pipe.checksum == oracle.checksum
+        row = {
+            "oracle_elapsed_us": oracle.elapsed_us,
+            "legacy_elapsed_us": legacy.elapsed_us,
+            "pipeline_elapsed_us": pipe.elapsed_us,
+            "pipeline_speedup": legacy.elapsed_us / max(pipe.elapsed_us, 1e-9),
+            "wall_s": time.time() - t0,
+        }
+        out["workloads"][name] = row
+        print(f"bench_json/{name},{row['pipeline_elapsed_us']:.0f},"
+              f"speedup={row['pipeline_speedup']:.2f}x "
+              f"wall={row['wall_s']:.1f}s", flush=True)
+    out["total_wall_s"] = time.time() - t_all
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"bench_json/written,{out['total_wall_s'] * 1e6:.0f},{path}",
+          flush=True)
+    return out
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--bench-json", nargs="?", const="BENCH_pr3.json",
+                        default=None, metavar="PATH",
+                        help="write the per-workload perf baseline to PATH "
+                             "and exit (default: BENCH_pr3.json)")
+    args = parser.parse_args()
+    if args.bench_json:
+        bench_json(args.bench_json)
+        return
+
     from benchmarks import (
         fig4_microbench,
         fig5_objects,
@@ -28,6 +96,7 @@ def main() -> None:
         fig8_threads,
         fig9_dualbuffer,
         fig10_problem_sizes,
+        fig_pipeline,
         fig_pool_scaling,
         fig_tiered_scan,
     )
@@ -42,6 +111,7 @@ def main() -> None:
         ("fig10", fig10_problem_sizes),
         ("fig_pool", fig_pool_scaling),
         ("fig_tiered_scan", fig_tiered_scan),
+        ("fig_pipeline", fig_pipeline),
     ]
     failures = 0
     for name, mod in modules:

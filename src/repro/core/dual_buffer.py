@@ -1,4 +1,4 @@
-"""DOLMA host runtime: tiered allocation + dual-buffer prefetch (§4.2, §5).
+"""DOLMA host runtime: tiered allocation + prefetch (§4.2, §5).
 
 :class:`DolmaRuntime` is what the HPC workloads (``repro.hpc``) run on. It
 implements, functionally and on the simulated clock:
@@ -12,6 +12,14 @@ implements, functionally and on the simulated clock:
   * cross-iteration dual-buffer prefetch: at the end of step *i* the read set
     is prefetched for step *i+1*, overlapping the fabric time with compute;
     the access barrier is deferred to first use (§5);
+  * the trace-driven prefetch **pipeline** (``pipeline=True``): the runtime
+    records each step's fetch/commit order, predicts the next step's access
+    order from it, and keeps a sliding window of ``prefetch_window`` objects
+    posted ahead of compute — ``fetch(k+1..k+w)`` overlaps the compute on
+    object *k* inside the iteration (and wraps across the iteration
+    boundary), the cache region is evicted by reuse distance computed from
+    the trace (Belady-from-trace), and each window is coalesced into one
+    batched scatter-gather read on the store/pool;
   * asynchronous write-back on demotion, synchronous reads (§4.2);
   * a compute cost model (max of FLOP time and local-memory time) so
     benchmark timings are deterministic on any host.
@@ -67,6 +75,8 @@ class DolmaRuntime:
         timeline: str = "main",
         sim_scale: float = 1.0,
         store: RemoteStore | MemoryPool | None = None,
+        pipeline: bool = False,
+        prefetch_window: int = 4,
     ) -> None:
         # sim_scale: fabric/compute costs are charged at sim_scale x the real
         # array bytes, so small (fast, testable) arrays model paper-scale
@@ -83,6 +93,10 @@ class DolmaRuntime:
         self.policy = policy or PlacementPolicy()
         self.timeline = timeline
         self.sim_scale = sim_scale
+        # trace-driven pipeline: predicted-order sliding-window prefetch with
+        # Belady-from-trace eviction and batched pool I/O
+        self.pipeline = pipeline
+        self.prefetch_window = max(int(prefetch_window), 1)
 
         # the remote tier: a single memory node by default, or any object
         # with the store API — notably a multi-node MemoryPool
@@ -92,16 +106,34 @@ class DolmaRuntime:
         self._finalized = False
         self._epoch = 0
         self._read_set: set[str] = set()
-        self._prefetched: dict[str, float] = {}  # name -> sim completion time
+        self._prefetched: dict[str, tuple[float, int]] = {}  # legacy dual buffer
         self.cache_region_bytes = 0
         self.local_region_bytes = 0
         self.metadata_region_bytes = 4096
         self._fetches_done_at = 0.0
+        self._fetch_done: dict[str, float] = {}  # per-object slot-freed time
         self._peak_cached = 0
         self._cached_now = 0
         self._resident: dict[str, int] = {}   # bytes of each remote object
         self._cache_share: dict[str, int] = {}  # resident in the cache region
+        self._cache_occupancy: dict[str, int] = {}  # bytes in cache per object
         self.plan: PlacementPlan | None = None
+        # --- access-trace recorder + pipeline state ---
+        self._trace: list[tuple[str, str]] = []   # this step's (op, name) events
+        self._prediction: list[str] = []          # predicted remote fetch order
+        self._pred_index: dict[str, int] = {}
+        self._trace_pos = 0
+        self._inflight: dict[str, tuple[float, int]] = {}  # name -> (done, covered)
+        self._event_idx = 0
+        self._last_use: dict[str, int] = {}
+        # completion time of posted tail-streams whose consumption overlaps
+        # compute; absorbed by the next charge_compute (or the step barrier)
+        self._stream_debt = 0.0
+        self._pf = {
+            "trace_hits": 0, "trace_misses": 0, "prefetched_bytes": 0,
+            "demand_bytes": 0, "batched_reads": 0, "evictions": 0,
+            "dropped_mispredicts": 0,
+        }
 
     # -- allocation interception ------------------------------------------
     def alloc(
@@ -215,18 +247,22 @@ class DolmaRuntime:
         self.cache_region_bytes = max(
             budget - local_bytes - self.metadata_region_bytes, 4096
         )
-        # Statically partition the cache region among remote objects
-        # (proportional to size): the resident portion persists across
-        # iterations and only the remainder is refetched (§4.2 "prefetches the
-        # largest possible portion of the data object that fits").
         remote = [(n, self.metadata.get(n).size_bytes) for n in plan.remote_names()]
-        total_remote = sum(s for _n, s in remote) or 1
-        usable = self.cache_region_bytes
-        if self.dual_buffer:
-            usable //= 2  # one half streams, one half is resident
-        for n, s in remote:
-            self._cache_share[n] = min(usable * s // total_remote, s)
+        for n, _s in remote:
             self._resident[n] = 0
+        if not self.pipeline:
+            # Statically partition the cache region among remote objects
+            # (proportional to size): the resident portion persists across
+            # iterations and only the remainder is refetched (§4.2 "prefetches
+            # the largest possible portion of the data object that fits").
+            total_remote = sum(s for _n, s in remote) or 1
+            usable = self.cache_region_bytes
+            if self.dual_buffer:
+                usable //= 2  # one half streams, one half is resident
+            for n, s in remote:
+                self._cache_share[n] = min(usable * s // total_remote, s)
+        # In pipeline mode the whole region is managed dynamically: residency
+        # is decided by Belady-from-trace eviction, not static shares.
         self.plan = plan
         self._finalized = True
         return plan
@@ -237,40 +273,72 @@ class DolmaRuntime:
         """One outer iteration.
 
         Dual buffer: at step exit, this step's read set is prefetched for the
-        next iteration into the idle buffer half. The reads are *posted* at
-        the moment the body's own fetches completed (when the idle half was
-        freed), so they overlap this step's compute on the fabric — the §4.2
-        overlap. The access barrier stays at first use (next step's fetch).
+        next iteration into the idle buffer half. Each object's read is
+        *posted* at the moment its own demand fetch completed (when its slot
+        in the idle half was freed), so it overlaps this step's compute on
+        the fabric — the §4.2 overlap. The access barrier stays at first use
+        (next step's fetch).
+
+        Pipeline: the recorded trace becomes the prediction for the next
+        step, and the window head for the next iteration is posted while this
+        step's trailing compute still runs.
         """
         self._check_final()
         self._read_set.clear()
+        self._trace = []
+        self._fetch_done.clear()
+        self._settle_cache_occupancy()
         self._fetches_done_at = self.clock.now(self.timeline)
         yield self
         self._epoch += 1
-        if self.dual_buffer:
+        if self.pipeline:
+            if self._stream_debt > 0.0:  # step barrier: all reads landed
+                self.clock.wait_until(self.timeline, self._stream_debt)
+                self._stream_debt = 0.0
+            self._end_step_pipeline()
+        elif self.dual_buffer:
             for name in sorted(self._read_set):
                 meta = self.metadata.get(name)
                 if meta.tier is Tier.REMOTE:
                     self._prefetched[name] = self._issue_chunked_read(
-                        name, issue_at=self._fetches_done_at
+                        name,
+                        issue_at=self._fetch_done.get(name, self._fetches_done_at),
                     )
 
     # -- data path ----------------------------------------------------------
     def fetch(self, name: str) -> np.ndarray:
         """Synchronous read; barrier deferred to this call site (§5).
 
-        The prefetched portion (bounded by the idle buffer half, §4.2 "the
-        largest possible portion that fits") is waited on; any remainder is
-        fetched on demand, window-synchronously — only one buffer-half's
-        worth of reads can be outstanding, which is what keeps tiny local
-        budgets slow (§6.1.1).
+        Legacy path: the prefetched portion (bounded by the idle buffer
+        half, §4.2 "the largest possible portion that fits") is waited on;
+        any remainder is fetched on demand, window-synchronously — only one
+        buffer-half's worth of reads can be outstanding, which is what keeps
+        tiny local budgets slow (§6.1.1).
+
+        Pipeline path: waits on the window entry posted in predicted access
+        order, then immediately re-pumps the window so ``fetch(k+1..k+w)``
+        overlaps the compute charged after this call returns.
+
+        LOCAL-tier objects return the live buffer itself (zero-copy), and
+        ``commit`` updates that buffer in place: a reference held across a
+        later ``commit`` of the same object observes the new values.
         """
         self._check_final()
         self._read_set.add(name)
+        self._trace.append(("fetch", name))
         lo = self._live[name]
         meta = self.metadata.get(name)
+        # reuse-distance trace stat: fetch events since this object's last use
+        idx = self._event_idx
+        self._event_idx += 1
+        prev = self._last_use.get(name)
+        if prev is not None:
+            meta.reuse_distance = idx - prev
+        self._last_use[name] = idx
         if meta.tier is not Tier.REMOTE:
             return lo.data
+        if self.pipeline:
+            return self._fetch_pipelined(name, meta)
         size = meta.size_bytes - self._resident.get(name, 0)
         covered = 0
         if name in self._prefetched:
@@ -285,19 +353,43 @@ class DolmaRuntime:
             )
             self.clock.wait_until(self.timeline, done)
         self._resident[name] = self._cache_share.get(name, 0)
-        self._track_cache(lo.obj.size_bytes)
+        self._track_cache(name, lo.obj.size_bytes)
         data = self.store.payload(name)
         self._fetches_done_at = self.clock.now(self.timeline)
+        self._fetch_done[name] = self._fetches_done_at
         return data
 
     def commit(self, name: str, array: np.ndarray) -> None:
-        """Write back an updated object (async demotion if REMOTE)."""
+        """Write back an updated object (async demotion if REMOTE).
+
+        LOCAL-tier commits copy into the object's existing buffer (the one
+        ``fetch`` hands out) instead of allocating a fresh array each
+        iteration; references obtained from earlier ``fetch`` calls therefore
+        see the committed values. A committed view aliasing the buffer
+        itself is the one case that still takes a full copy.
+        """
         self._check_final()
+        self._trace.append(("commit", name))
         lo = self._live[name]
         meta = self.metadata.get(name)
         array = np.asarray(array)
         if meta.tier is not Tier.REMOTE:
-            lo.data = np.array(array, copy=True)
+            cur = lo.data
+            if (
+                cur is not None
+                and cur.shape == array.shape
+                and cur.dtype == array.dtype
+            ):
+                # reuse the existing buffer instead of allocating a fresh
+                # copy every iteration; a full copy is only needed when the
+                # caller hands back a view aliasing the buffer itself
+                if array is not cur:
+                    if np.shares_memory(array, cur):
+                        lo.data = np.array(array, copy=True)
+                    else:
+                        np.copyto(cur, array)
+            else:
+                lo.data = np.array(array, copy=True)
             self.metadata.update(name, epoch=self._epoch, status=Status.PRESENT)
             return
         # async posted writes stream at line rate; the timeline doesn't wait
@@ -308,18 +400,31 @@ class DolmaRuntime:
         )
         self.metadata.update(name, epoch=self._epoch, status=Status.DIRTY)
         # the local copy in the cache region is the freshest: stays resident
-        self._resident[name] = self._cache_share.get(name, 0)
+        if not self.pipeline:
+            self._resident[name] = self._cache_share.get(name, 0)
+        self._track_cache(name, max(self._resident.get(name, 0),
+                                    self._cache_occupancy.get(name, 0)))
         if self.sync_writes:
             self.clock.wait_until(self.timeline, end)
 
     def charge_compute(self, *, flops: float = 0.0, bytes_touched: float = 0.0,
                        us: float | None = None) -> float:
-        """Advance the compute timeline (roofline-style max of terms)."""
+        """Advance the compute timeline (roofline-style max of terms).
+
+        In pipeline mode this is also the synchronization point for
+        tail-streams posted by predicted fetches: the compute consuming an
+        object runs concurrently with the rest of it arriving, so the pair
+        costs max(compute, stream) instead of their sum.
+        """
         if us is None:
             flop_us = flops * self.sim_scale / (self.compute_gflops * 1e3)
             mem_us = bytes_touched * self.sim_scale / (self.local_mem.read_gbps * 1e3)
             us = max(flop_us, mem_us)
-        return self.clock.advance(self.timeline, us)
+        t = self.clock.advance(self.timeline, us)
+        if self._stream_debt > 0.0:
+            t = self.clock.wait_until(self.timeline, self._stream_debt)
+            self._stream_debt = 0.0
+        return t
 
     # -- metrics ---------------------------------------------------------
     def elapsed_us(self) -> float:
@@ -338,6 +443,14 @@ class DolmaRuntime:
             + self.metadata_region_bytes
         )
 
+    def last_trace(self) -> list[tuple[str, str]]:
+        """The most recent step's (op, name) access trace."""
+        return list(self._trace)
+
+    def predicted_order(self) -> list[str]:
+        """Remote-object fetch order predicted from the recorded trace."""
+        return list(self._prediction)
+
     def stats(self) -> dict[str, Any]:
         s = self.store.stats()
         s.update(
@@ -346,13 +459,188 @@ class DolmaRuntime:
             peak_local_bytes=self.peak_local_bytes(),
             epoch=self._epoch,
             plan=self.plan.summary() if self.plan else None,
+            prefetch=dict(
+                self._pf,
+                pipeline=self.pipeline,
+                window=self.prefetch_window,
+                prediction_len=len(self._prediction),
+            ),
+            reuse_distances=self.metadata.reuse_stats(),
         )
         return s
 
+    # -- trace-driven pipeline internals ----------------------------------
+    def _fetch_pipelined(self, name: str, meta: ObjectMeta) -> np.ndarray:
+        size = meta.size_bytes
+        predicted = name in self._pred_index
+        if name in self._inflight:
+            done, covered = self._inflight.pop(name)
+            self.clock.wait_until(self.timeline, done)  # barrier at first use
+            self._resident[name] = min(
+                self._resident.get(name, 0) + covered, size
+            )
+        if predicted:
+            self._pf["trace_hits"] += 1
+            # advance along the prediction and re-pump *before* posting this
+            # object's tail: the next window entries are nearer in predicted
+            # order, so their (small) heads must not queue behind a large
+            # tail that is consumed gradually anyway
+            self._trace_pos = max(self._trace_pos, self._pred_index[name] + 1)
+            self._pump(self.clock.now(self.timeline))
+        else:
+            self._pf["trace_misses"] += 1
+        remainder = size - self._resident.get(name, 0)
+        if remainder > 0:
+            # Retention grant for the streamed tail is judged by this
+            # object's *post-read* reuse distance (its next use is a full
+            # cycle away), so it can only displace residents the trace says
+            # are reused even later — never the stable working set.
+            grant = self._evict_for(
+                remainder, next_use=self._next_use(name) if predicted else 0,
+                protect={name} | set(self._inflight),
+            )
+            now = self.clock.now(self.timeline)
+            if predicted:
+                # Predicted object: the trace pins its consumption order, so
+                # the tail beyond the resident/prefetched head streams
+                # through the region *while this object's compute consumes
+                # it* — the access barrier covers only the head, and the
+                # stream's completion is absorbed by the next compute charge
+                # (max(compute, fetch) instead of compute + fetch).
+                end = self.store.stream_read(
+                    name, nbytes=remainder,
+                    chunk_bytes=self._pipeline_chunk_bytes(),
+                    issue_at=now, mode="pipelined",
+                )
+                self.clock.wait_until(self.timeline, now + self.fabric.read_base_us)
+                self._stream_debt = max(self._stream_debt, end)
+            else:
+                # trace miss: consumption order unknown — full synchronous
+                # barrier through the (full) cache region, window-style
+                end = self.store.stream_read(
+                    name, nbytes=remainder, chunk_bytes=self._chunk_bytes(),
+                    issue_at=now, mode="windowed",
+                )
+                self.clock.wait_until(self.timeline, end)
+            self._pf["demand_bytes"] += remainder
+            self._resident[name] = min(self._resident.get(name, 0) + grant, size)
+        self._track_cache(name, size)
+        data = self.store.payload(name)
+        self._fetches_done_at = self.clock.now(self.timeline)
+        self._fetch_done[name] = self._fetches_done_at
+        return data
+
+    def _end_step_pipeline(self) -> None:
+        """Adopt this step's trace as the next step's prediction and post the
+        window head while the trailing compute still runs."""
+        fetched = [
+            n for op, n in self._trace
+            if op == "fetch" and self.metadata.get(n).tier is Tier.REMOTE
+        ]
+        prediction = list(dict.fromkeys(fetched))
+        if prediction:
+            self._prediction = prediction
+            self._pred_index = {n: i for i, n in enumerate(prediction)}
+            # drop window entries the new trace disowns (mispredicts); their
+            # buffer space is reclaimable immediately
+            for stale in [n for n in self._inflight if n not in self._pred_index]:
+                del self._inflight[stale]
+                self._pf["dropped_mispredicts"] += 1
+        self._trace_pos = 0
+        self._pump(self._fetches_done_at)
+
+    def _pump(self, at: float) -> None:
+        """Keep ``prefetch_window`` predicted objects posted ahead of the
+        current trace position (wrapping across the iteration boundary), as
+        one batched scatter-gather read. Space is made by Belady-from-trace
+        eviction; nearer window entries win ties for the remaining room."""
+        n_pred = len(self._prediction)
+        if n_pred == 0:
+            return
+        window: list[tuple[str, int]] = []
+        for off in range(min(self.prefetch_window, n_pred)):
+            cand = self._prediction[(self._trace_pos + off) % n_pred]
+            if cand not in self._inflight:  # offsets index distinct entries
+                window.append((cand, off))
+        # Head staging is transient (predicted objects stream-overlap with or
+        # without a head), so it must not displace the retained working set:
+        # only residents the trace never predicts again are evictable here.
+        protect = set(self._inflight) | set(self._pred_index)
+        requests: list[tuple[str, int]] = []
+        for cand, off in window:
+            need = self.metadata.get(cand).size_bytes - self._resident.get(cand, 0)
+            if need <= 0:
+                continue
+            grant = self._evict_for(need, next_use=off, protect=protect)
+            if grant <= 0:
+                break  # region full: farther window entries wait their turn
+            requests.append((cand, grant))
+            # reserve the space so later grants in this pump see it taken
+            self._inflight[cand] = (at, grant)
+        if not requests:
+            return
+        done = self.store.stream_read_batch(
+            requests, chunk_bytes=self._pipeline_chunk_bytes(),
+            issue_at=at, mode="pipelined",
+        )
+        for cand, covered in requests:
+            self._inflight[cand] = (done[cand], covered)
+            self._pf["prefetched_bytes"] += covered
+        self._pf["batched_reads"] += 1
+
+    def _cache_used(self) -> int:
+        return (
+            sum(self._resident.values())
+            + sum(covered for _done, covered in self._inflight.values())
+        )
+
+    def _next_use(self, name: str) -> int:
+        """Distance (in predicted fetches) to this object's next use, with
+        the trace assumed to repeat cyclically across iterations."""
+        n_pred = len(self._prediction)
+        i = self._pred_index.get(name)
+        if i is None or n_pred == 0:
+            return n_pred + 1  # never predicted to be read again: farthest
+        return (i - self._trace_pos) % n_pred
+
+    def _evict_for(self, need: int, *, next_use: int, protect: set[str]) -> int:
+        """Free cache space via Belady-from-trace: drop residency of objects
+        whose next predicted use is *strictly farther* than the requester's
+        (``next_use``, in predicted fetches). Returns the bytes actually
+        available for the caller (<= need)."""
+        free = self.cache_region_bytes - self._cache_used()
+        if free >= need:
+            return need
+        victims = sorted(
+            (
+                n for n, b in self._resident.items()
+                if b > 0 and n not in protect and self._next_use(n) > next_use
+            ),
+            key=lambda n: (-self._next_use(n), n),
+        )
+        for victim in victims:
+            if free >= need:
+                break
+            free += self._resident[victim]
+            self._resident[victim] = 0
+            self._cache_occupancy.pop(victim, None)
+            self._pf["evictions"] += 1
+        return max(min(free, need), 0)
+
     # -- internals --------------------------------------------------------
     def _chunk_bytes(self) -> int:
-        half = self.cache_region_bytes // 2 if self.dual_buffer else self.cache_region_bytes
-        return max(min(half, self.fabric.max_op_bytes), 4096)
+        if self.pipeline:
+            region = self.cache_region_bytes  # window replaces the two halves
+        elif self.dual_buffer:
+            region = self.cache_region_bytes // 2
+        else:
+            region = self.cache_region_bytes
+        return max(min(region, self.fabric.max_op_bytes), 4096)
+
+    def _pipeline_chunk_bytes(self) -> int:
+        # posted async reads are chunked like the legacy prefetch path: a
+        # handful of RDMA ops per window entry, never below one page
+        return max(self._chunk_bytes() // 8, 4096)
 
     def _issue_chunked_read(self, name: str, issue_at: float | None = None
                             ) -> tuple[float, int]:
@@ -376,9 +664,32 @@ class DolmaRuntime:
         )
         return end, covered
 
-    def _track_cache(self, nbytes: int) -> None:
-        self._cached_now = min(nbytes, self.cache_region_bytes)
+    def _track_cache(self, name: str, nbytes: int) -> None:
+        """Record that ``nbytes`` of ``name`` occupy the cache region now.
+
+        Occupancy is summed over every object resident or streaming in the
+        same step (then clipped to the region size), so ``peak_local_bytes``
+        reflects several co-cached remote objects instead of only the
+        last-touched one.
+        """
+        self._cache_occupancy[name] = min(nbytes, self.cache_region_bytes)
+        self._cached_now = min(
+            sum(self._cache_occupancy.values()), self.cache_region_bytes
+        )
         self._peak_cached = max(self._peak_cached, self._cached_now)
+
+    def _settle_cache_occupancy(self) -> None:
+        """At a step boundary the streamed (non-resident) portions have been
+        recycled; only the resident shares persist in the region."""
+        for n in list(self._cache_occupancy):
+            kept = self._resident.get(n, 0)
+            if kept > 0:
+                self._cache_occupancy[n] = min(kept, self.cache_region_bytes)
+            else:
+                del self._cache_occupancy[n]
+        self._cached_now = min(
+            sum(self._cache_occupancy.values()), self.cache_region_bytes
+        )
 
     def _check_final(self) -> None:
         if not self._finalized:
@@ -390,7 +701,14 @@ def run_iterative(
     n_iters: int,
     body: Callable[[DolmaRuntime, int], None],
 ) -> float:
-    """Drive ``body`` for ``n_iters`` steps; return total simulated us."""
+    """Drive ``body`` for ``n_iters`` steps; return total simulated us.
+
+    This is the single iteration driver (``repro.hpc.base.run_workload``
+    wraps it): in pipeline mode the first iteration doubles as the
+    warmup-trace pass — the runtime records the access order the body emits
+    through fetch/commit, and from the second iteration on that trace drives
+    the sliding prefetch window.
+    """
     for it in range(n_iters):
         with runtime.step():
             body(runtime, it)

@@ -254,6 +254,37 @@ class FabricResource:
         dur = self.model.stream_us(kind, size_bytes, chunk_bytes, mode=mode)
         return self._occupy(kind, size_bytes, issue_time_us, dur)
 
+    def issue_batch(self, kind: str, sizes: list[int], chunk_bytes: int,
+                    issue_time_us: float, *, mode: str = "pipelined",
+                    ) -> tuple[float, list[float], float]:
+        """One posted scatter-gather transfer spanning several extents.
+
+        The per-op base cost is paid once for the whole batch; element *i*
+        completes when the cumulative bytes through it have streamed.
+        Counts as a single posted op. Returns (start, completions, end).
+        """
+        total = sum(max(s, 0) for s in sizes)
+        if total <= 0:
+            t = issue_time_us
+            return t, [t] * len(sizes), t
+        with self._lock:
+            start = max(self._free_at, issue_time_us)
+            completions: list[float] = []
+            cum = 0
+            for s in sizes:
+                cum += max(s, 0)
+                completions.append(
+                    start + self.model.stream_us(kind, cum, chunk_bytes, mode=mode)
+                )
+            end = max(completions)
+            self._free_at = end
+            self.n_ops += 1
+            if kind == "read":
+                self.bytes_read += total
+            elif kind == "write":
+                self.bytes_written += total
+        return start, completions, end
+
     def _occupy(self, kind: str, size_bytes: int, issue_time_us: float,
                 dur: float) -> tuple[float, float]:
         with self._lock:

@@ -37,6 +37,9 @@ class ObjectMeta:
     epoch: int = 0              # last step/iteration that wrote the object
     remote_addr: int | None = None
     local_slot: int | None = None  # which dual-buffer slot holds it (if CACHED)
+    # trace stats (fed by the runtime's access recorder): fetch-event distance
+    # between the last two uses — the reuse signal Belady-from-trace evicts by
+    reuse_distance: int | None = None
 
     def to_json(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -130,3 +133,12 @@ class MetadataTable:
             return sum(
                 m.size_bytes for m in self._table.values() if m.tier is Tier.REMOTE
             )
+
+    def reuse_stats(self) -> dict[str, int]:
+        """Observed per-object reuse distances (fetch events between uses)."""
+        with self._lock:
+            return {
+                m.name: m.reuse_distance
+                for m in self._table.values()
+                if m.reuse_distance is not None
+            }

@@ -233,21 +233,29 @@ class MemoryPool:
         )
         return best, best.least_loaded_resource()
 
-    def _node_shares(self, name: str) -> dict[int, int]:
+    def _projected_cost(self) -> dict[int, float]:
+        """Per-node routing cost seed: when each node's best QP frees up."""
+        return {
+            n.node_id: n.least_loaded_resource().free_at
+            for n in self.alive_nodes()
+        }
+
+    def _node_shares(
+        self, name: str, cost: dict[int, float] | None = None
+    ) -> dict[int, int]:
         """bytes served per node for a full read, after replica selection.
 
         Replica choice must account for bytes this very transfer has already
         assigned (all extents issue at the same sim-time, so ``free_at``
         alone never advances between picks): otherwise, under replication,
         every extent ties to the same lowest-id node and a striped read
-        collapses onto one QP.
+        collapses onto one QP. Passing a shared ``cost`` dict lets a batched
+        read spread *several* objects' extents over the pool the same way.
         """
         po = self._directory[name]
         line_bpus = (self.fabric.read_line_gbps or self.fabric.read_gbps) * 1e3
-        cost = {
-            n.node_id: n.least_loaded_resource().free_at
-            for n in self.alive_nodes()
-        }
+        if cost is None:
+            cost = self._projected_cost()
         shares: dict[int, int] = {}
         for ext in po.extents:
             live = self._live_replicas(name, ext)
@@ -446,6 +454,57 @@ class MemoryPool:
                                            pipelined=mode)
             end = max(end, node_end)
         return end
+
+    def stream_read_batch(
+        self,
+        requests: list[tuple[str, int]],
+        *,
+        chunk_bytes: int,
+        issue_at: float,
+        mode: str = "pipelined",
+        resource: FabricResource | None = None,
+    ) -> dict[str, float]:
+        """Coalesced scatter-gather read across the pool.
+
+        All requests' extents are replica-routed against one shared
+        projected-cost view (so the whole window spreads over the nodes,
+        not just each object individually), then every node streams its
+        combined share as a *single* posted op. A request completes when
+        the slowest node serving it reaches the end of that request's
+        portion of the node's stream — earlier window entries still
+        unblock first.
+        """
+        if not requests:
+            return {}
+        cost = self._projected_cost()
+        t0 = issue_at
+        # per node: (request_index, node_bytes) in batch order
+        per_node: dict[int, list[tuple[int, int]]] = {}
+        for i, (name, nbytes) in enumerate(requests):
+            if name not in self._directory:
+                raise KeyError(name)
+            t0 = max(t0, self.pending_until(name))  # RAW for the whole batch
+            if nbytes <= 0:
+                continue
+            shares = self._node_shares(name, cost)
+            total_real = sum(shares.values()) or 1
+            for nid in sorted(shares):
+                # nbytes may be sim-scaled; shares are proportions (scale-free)
+                node_bytes = int(nbytes) * shares[nid] // total_real
+                if node_bytes > 0:
+                    per_node.setdefault(nid, []).append((i, node_bytes))
+        out = {name: t0 for name, _ in requests}
+        for nid in sorted(per_node):
+            node = self.nodes[nid]
+            qp = node.least_loaded_resource()
+            entries = per_node[nid]
+            _s, completions, _end = qp.issue_batch(
+                "read", [nb for _, nb in entries], chunk_bytes, t0, mode=mode
+            )
+            for (i, _), done in zip(entries, completions):
+                name = requests[i][0]
+                out[name] = max(out[name], done)
+        return out
 
     def stream_write(
         self,

@@ -253,6 +253,37 @@ class RemoteStore:
         _s, end = res.issue_stream("read", size, chunk_bytes, t, pipelined=mode)
         return end
 
+    def stream_read_batch(
+        self,
+        requests: list[tuple[str, int]],
+        *,
+        chunk_bytes: int,
+        issue_at: float,
+        mode: str = "pipelined",
+        resource: FabricResource | None = None,
+    ) -> dict[str, float]:
+        """Coalesced scatter-gather read: one posted op spanning many objects.
+
+        ``requests`` is ``[(name, nbytes), ...]`` in access order; returns
+        ``{name: completion_time}``. The batch orders after the latest
+        pending async write among the named objects (RAW), pays the fabric
+        base cost once, and occupies a single QP — each object completes
+        when the cumulative stream reaches the end of its extent, so
+        earlier window entries unblock their access barrier first.
+        """
+        self._check_alive()
+        if not requests:
+            return {}
+        with self._lock:
+            objs = [self._objects[name] for name, _ in requests]
+        t0 = max([issue_at] + [o.pending_write_until for o in objs])
+        res = resource or self.least_loaded_resource()
+        sizes = [int(nb) for _, nb in requests]
+        _s, completions, _end = res.issue_batch(
+            "read", sizes, chunk_bytes, t0, mode=mode
+        )
+        return {name: done for (name, _), done in zip(requests, completions)}
+
     def stream_write(
         self,
         name: str,

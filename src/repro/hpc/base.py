@@ -16,7 +16,7 @@ from typing import Any
 
 import numpy as np
 
-from repro.core.dual_buffer import DolmaRuntime
+from repro.core.dual_buffer import DolmaRuntime, run_iterative
 from repro.core.fabric import FabricModel, INFINIBAND_100G
 from repro.core.objects import ObjectKind
 from repro.core.pool import MemoryPool
@@ -69,9 +69,17 @@ class HPCWorkload:
     def _target_bytes(self, paper_gb: float) -> int:
         return max(int(paper_gb * 1e9 / 1000 * self.scale), 1 * MB)
 
-    def charge(self, rt: DolmaRuntime) -> None:
-        rt.charge_compute(flops=self.flops_per_iter,
-                          bytes_touched=self.bytes_per_iter)
+    def charge(self, rt: DolmaRuntime, frac: float = 1.0) -> None:
+        """Charge ``frac`` of the per-iteration analytic compute cost.
+
+        Workload bodies charge in fractions *between* fetches (summing to
+        1.0 per iteration, so totals are unchanged): that is the compute the
+        pipeline's sliding prefetch window overlaps with — fetch(k+1..k+w)
+        runs on the fabric while the charge for object k advances the
+        compute timeline.
+        """
+        rt.charge_compute(flops=self.flops_per_iter * frac,
+                          bytes_touched=self.bytes_per_iter * frac)
 
 
 def pooled_runtime(
@@ -106,15 +114,20 @@ def run_workload(
     rt: DolmaRuntime,
     n_iters: int = 5,
 ) -> WorkloadResult:
+    """Register, finalize, and drive the workload through ``run_iterative``.
+
+    There is exactly one iteration driver (``repro.core.run_iterative``);
+    this wrapper only adds registration/placement and result packaging. In
+    pipeline mode the first iteration doubles as the warmup-trace pass: the
+    runtime records the fetch/commit order the workload emits, and the
+    recorded trace drives the sliding prefetch window from iteration 1 on.
+    """
     workload.register(rt)
     rt.finalize()
-    for it in range(n_iters):
-        with rt.step():
-            workload.iterate(rt, it)
-    rt.store.fence(timeline=rt.timeline)
+    elapsed = run_iterative(rt, n_iters, workload.iterate)
     return WorkloadResult(
         name=workload.name,
-        elapsed_us=rt.elapsed_us(),
+        elapsed_us=elapsed,
         checksum=workload.checksum(rt),
         stats=rt.stats(),
     )

@@ -41,17 +41,19 @@ class BT(HPCWorkload):
 
     def iterate(self, rt, it):
         u = rt.fetch("u")
-        forcing = rt.fetch("forcing")
-        # rhs = forcing - spatial stencil of u
-        rhs = forcing.copy()
+        # spatial stencil of u — forcing prefetches while this runs
+        su = np.zeros_like(u)
         for ax in (1, 2, 3):
-            rhs = rhs + 0.1 * (np.roll(u, 1, axis=ax) - 2 * u + np.roll(u, -1, axis=ax))
+            su = su + (np.roll(u, 1, axis=ax) - 2 * u + np.roll(u, -1, axis=ax))
+        self.charge(rt, 0.5)
+        forcing = rt.fetch("forcing")
+        rhs = forcing + 0.1 * su
         # ADI-style sweeps: tridiagonal relaxation along each axis
         for ax in (1, 2, 3):
             u = u + 0.3 * (rhs + 0.05 * np.roll(rhs, 1, axis=ax))
         rt.commit("rhs", rhs)
         rt.commit("u", u)
-        self.charge(rt)
+        self.charge(rt, 0.5)  # sweeps: write-backs + next window hide under it
 
     def checksum(self, rt):
         return float(np.sum(rt.fetch("u") ** 2))

@@ -53,8 +53,10 @@ class CG(HPCWorkload):
 
     def iterate(self, rt, it):
         a = rt.fetch("a")
-        x, r, p = rt.fetch("x"), rt.fetch("r"), rt.fetch("p")
-        q = self._matvec(a, p)
+        p = rt.fetch("p")
+        q = self._matvec(a, p)          # the SpMV dominates the iteration...
+        self.charge(rt, 0.7)            # ...and the solver vectors prefetch under it
+        x, r = rt.fetch("x"), rt.fetch("r")
         denom = float(p @ q) or 1.0
         alpha = float(r @ r) / denom
         x = x + alpha * p
@@ -64,7 +66,7 @@ class CG(HPCWorkload):
         rt.commit("x", x)
         rt.commit("r", r_new)
         rt.commit("p", p)
-        self.charge(rt)
+        self.charge(rt, 0.3)
 
     def checksum(self, rt):
         return float(np.sum(rt.fetch("x")))

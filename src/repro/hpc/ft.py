@@ -45,10 +45,11 @@ class FT(HPCWorkload):
         tw = rt.fetch("twiddle")
         u0 = rt.fetch("u_0")
         u0 = u0 * tw                       # evolve in spectral space
+        self.charge(rt, 0.4)
         u1 = np.fft.ifftn(u0)              # back to physical space
         rt.commit("u_0", u0)
         rt.commit("u_1", u1)
-        self.charge(rt)
+        self.charge(rt, 0.6)  # ifft: write-backs + next window hide under it
 
     def checksum(self, rt):
         u1 = rt.fetch("u_1")

@@ -40,6 +40,7 @@ class IS(HPCWorkload):
     def iterate(self, rt, it):
         keys = rt.fetch("key_array")
         counts = np.bincount(keys, minlength=self.MAX_KEY)
+        self.charge(rt, 0.6)
         sorted_keys = np.repeat(
             np.arange(self.MAX_KEY, dtype=np.int32), counts
         )
@@ -48,7 +49,7 @@ class IS(HPCWorkload):
         new_keys = np.clip(new_keys, 0, self.MAX_KEY - 1).astype(np.int32)
         rt.commit("key_buf2", sorted_keys)
         rt.commit("key_array", new_keys)
-        self.charge(rt)
+        self.charge(rt, 0.4)
 
     def checksum(self, rt):
         buf = rt.fetch("key_buf2")

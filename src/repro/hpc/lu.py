@@ -40,19 +40,22 @@ class LU(HPCWorkload):
         self.write_bytes_per_iter = 2 * vol * 8
 
     def iterate(self, rt, it):
-        u, rsd, frct = rt.fetch("u"), rt.fetch("rsd"), rt.fetch("frct")
-        rsd = frct.copy()
+        u = rt.fetch("u")
+        # spatial stencil of u — rsd/frct prefetch while this runs
+        su = np.zeros_like(u)
         for ax in (1, 2, 3):
-            rsd = rsd + 0.08 * (
-                np.roll(u, 1, axis=ax) - 2 * u + np.roll(u, -1, axis=ax)
-            )
+            su = su + (np.roll(u, 1, axis=ax) - 2 * u + np.roll(u, -1, axis=ax))
+        self.charge(rt, 0.4)
+        rt.fetch("rsd")  # RMW read of the residual object (overwritten below)
+        frct = rt.fetch("frct")
+        rsd = frct + 0.08 * su
         # lower sweep then upper sweep (SSOR flavour)
         lower = rsd + 0.05 * np.roll(rsd, 1, axis=1)
         upper = lower + 0.05 * np.roll(lower, -1, axis=1)
         u = u + 0.5 * upper
         rt.commit("rsd", upper)
         rt.commit("u", u)
-        self.charge(rt)
+        self.charge(rt, 0.6)  # sweeps: write-backs + next window hide under it
 
     def checksum(self, rt):
         return float(np.sum(rt.fetch("u") ** 2))

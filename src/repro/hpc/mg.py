@@ -44,10 +44,12 @@ class MG(HPCWorkload):
         self.write_bytes_per_iter = 2 * vol * 8
 
     def iterate(self, rt, it):
-        u, v, r = rt.fetch("u"), rt.fetch("v"), rt.fetch("r")
-        # residual + smooth (fine)
+        u, v = rt.fetch("u"), rt.fetch("v")
+        # residual + smooth (fine) — the residual object prefetches under it
         r = v - _laplacian(u)
         u = u + 0.8 / 6.0 * r
+        self.charge(rt, 0.6)
+        rt.fetch("r")  # RMW read of the residual object (overwritten below)
         # coarse correction (restrict -> smooth -> prolong)
         rc = r[::2, ::2, ::2]
         ec = 0.8 / 6.0 * rc
@@ -55,7 +57,7 @@ class MG(HPCWorkload):
         u = u + e
         rt.commit("u", u)
         rt.commit("r", r)
-        self.charge(rt)
+        self.charge(rt, 0.4)
 
     def checksum(self, rt):
         return float(np.sum(rt.fetch("u") ** 2))

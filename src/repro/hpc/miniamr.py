@@ -40,12 +40,13 @@ class MiniAMR(HPCWorkload):
 
     def iterate(self, rt, it):
         blocks = rt.fetch("blocks")
-        levels = rt.fetch("levels")
-        # 7-point stencil within each block
+        # 7-point stencil within each block — levels prefetch while it runs
         new = -6.0 * blocks
         for ax in (1, 2, 3):
             new += np.roll(blocks, 1, axis=ax) + np.roll(blocks, -1, axis=ax)
         blocks = blocks + 0.05 * new
+        self.charge(rt, 0.7)
+        levels = rt.fetch("levels")
         # refinement: the top-k energetic blocks get smoothed copies of
         # themselves (stand-in for split/merge data motion)
         energy = np.abs(blocks).mean(axis=(1, 2, 3))
@@ -56,7 +57,7 @@ class MiniAMR(HPCWorkload):
         levels[hot] += 1
         rt.commit("blocks", blocks)
         rt.commit("levels", levels)
-        self.charge(rt)
+        self.charge(rt, 0.3)
 
     def checksum(self, rt):
         return float(np.sum(rt.fetch("blocks") ** 2))

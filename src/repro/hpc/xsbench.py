@@ -38,23 +38,26 @@ class XSBench(HPCWorkload):
         self.write_bytes_per_iter = 0
 
     def iterate(self, rt, it):
-        grid = rt.fetch("index_grid")
         energy = rt.fetch("energy_grid")
-        tally = rt.fetch("tally")
         rng = np.random.default_rng(1234 + it)
         samples = rng.random(self.LOOKUPS)
+        # binary searches on the energy grid — the big xs grid prefetches
         idx = np.clip(np.searchsorted(energy, samples) - 1, 0, self.n_gp - 2)
         frac = (samples - energy[idx]) / np.maximum(
             energy[idx + 1] - energy[idx], 1e-12
         )
+        self.charge(rt, 0.3)
+        grid = rt.fetch("index_grid")
         xs = grid[idx] * (1 - frac)[:, None] + grid[idx + 1] * frac[:, None]
         macro = xs.sum(axis=1)
+        self.charge(rt, 0.5)
+        tally = rt.fetch("tally")
         tally = tally + np.array([
             macro.sum(), macro.max(), macro.min(), float(idx.sum() % 997),
             0, 0, 0, 0,
         ])
         rt.commit("tally", tally)
-        self.charge(rt)
+        self.charge(rt, 0.2)
 
     def checksum(self, rt):
         return float(rt.fetch("tally")[0])

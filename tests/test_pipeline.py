@@ -1,0 +1,263 @@
+"""Trace-driven prefetch pipeline: correctness, monotonicity, and the
+batched scatter-gather store path."""
+import numpy as np
+import pytest
+
+from repro.core import DolmaRuntime, MemoryPool, RemoteStore
+from repro.core.fabric import INFINIBAND_100G, SimClock
+from repro.core.placement import PlacementPolicy
+from repro.hpc import WORKLOADS, pooled_runtime, run_workload
+
+SCALE = 0.2
+SIM = 1000.0 / SCALE
+
+
+def _rt(frac, **kw):
+    kw.setdefault("policy", PlacementPolicy(all_large_remote=True))
+    return DolmaRuntime(local_fraction=frac, sim_scale=SIM, **kw)
+
+
+# -- bit-exactness ---------------------------------------------------------
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_pipeline_bit_identical_vs_oracle(name):
+    """Pipeline on/off both reproduce the untiered oracle bit-for-bit."""
+    cls = WORKLOADS[name]
+    oracle = run_workload(cls(scale=SCALE, seed=7),
+                          DolmaRuntime(local_fraction=1.0), n_iters=3)
+    for pipeline in (False, True):
+        tiered = run_workload(cls(scale=SCALE, seed=7),
+                              _rt(0.1, pipeline=pipeline), n_iters=3)
+        assert tiered.checksum == oracle.checksum  # bit-identical, no approx
+
+
+def test_pipeline_bit_identical_on_pool():
+    oracle = run_workload(WORKLOADS["CG"](scale=SCALE, seed=7),
+                          DolmaRuntime(local_fraction=1.0), n_iters=3)
+    rt = pooled_runtime(3, local_fraction=0.1, sim_scale=SIM, pipeline=True,
+                        policy=PlacementPolicy(all_large_remote=True))
+    res = run_workload(WORKLOADS["CG"](scale=SCALE, seed=7), rt, n_iters=3)
+    assert res.checksum == oracle.checksum
+    assert res.stats["prefetch"]["batched_reads"] > 0
+
+
+# -- monotonicity ----------------------------------------------------------
+@pytest.mark.parametrize("name", ["CG", "MG", "BT"])
+def test_pipelined_never_slower_than_serial(name):
+    """Property: pipelined elapsed <= serial elapsed at every swept local
+    fraction (serial = no prefetch at all, sync one-op-at-a-time reads)."""
+    cls = WORKLOADS[name]
+    for frac in (0.05, 0.1, 0.25, 0.5):
+        serial = run_workload(cls(scale=SCALE, seed=1),
+                              _rt(frac, dual_buffer=False), 4)
+        pipe = run_workload(cls(scale=SCALE, seed=1),
+                            _rt(frac, pipeline=True), 4)
+        assert pipe.elapsed_us <= serial.elapsed_us * (1 + 1e-9), frac
+
+
+def test_pipeline_beats_cross_iteration_prefetch_at_small_fraction():
+    """The tentpole claim, as a cheap regression guard: at a small local
+    fraction the trace-driven pipeline clearly beats the legacy dual
+    buffer (the full sweep lives in benchmarks/fig_pipeline.py)."""
+    cls = WORKLOADS["CG"]
+    base = run_workload(cls(scale=SCALE, seed=1),
+                        _rt(0.02, dual_buffer=True), 10)
+    pipe = run_workload(cls(scale=SCALE, seed=1),
+                        _rt(0.02, pipeline=True), 10)
+    assert pipe.elapsed_us * 1.3 < base.elapsed_us
+
+
+# -- trace recording + prediction ------------------------------------------
+def test_trace_records_fetch_commit_order_and_predicts():
+    rt = _rt(0.2, pipeline=True)
+    rt.alloc("a", np.zeros(1 << 16))
+    rt.alloc("b", np.zeros(1 << 16))
+    rt.finalize()
+    with rt.step():
+        rt.fetch("a")
+        rt.fetch("b")
+        rt.commit("b", np.ones(1 << 16))
+    assert rt.last_trace() == [("fetch", "a"), ("fetch", "b"), ("commit", "b")]
+    assert rt.predicted_order() == ["a", "b"]
+    with rt.step():
+        rt.fetch("a")
+        rt.fetch("b")
+    stats = rt.stats()["prefetch"]
+    # second step fetched in predicted order -> both served by the pipeline
+    assert stats["trace_hits"] == 2
+    assert stats["prediction_len"] == 2
+
+
+def test_trace_miss_falls_back_to_demand_fetch():
+    rt = _rt(0.2, pipeline=True)
+    rt.alloc("a", np.zeros(1 << 16))
+    rt.alloc("b", np.zeros(1 << 16))
+    rt.finalize()
+    with rt.step():
+        rt.fetch("a")
+    with rt.step():
+        rt.fetch("b")  # never predicted: demand path, still correct
+    stats = rt.stats()["prefetch"]
+    assert stats["trace_misses"] >= 2
+    # the mispredicted window entry for "a" was dropped on re-prediction
+    with rt.step():
+        rt.fetch("b")
+    assert rt.predicted_order() == ["b"]
+
+
+def test_reuse_distance_recorded():
+    rt = _rt(0.2, pipeline=True)
+    rt.alloc("a", np.zeros(1 << 16))
+    rt.alloc("b", np.zeros(1 << 16))
+    rt.finalize()
+    for _ in range(2):
+        with rt.step():
+            rt.fetch("a")
+            rt.fetch("b")
+    # a,b,a,b -> each object re-used two fetch events after its last use
+    assert rt.stats()["reuse_distances"] == {"a": 2, "b": 2}
+
+
+# -- Belady-from-trace eviction --------------------------------------------
+def test_belady_evicts_farthest_reuse_first():
+    rt = _rt(0.2, pipeline=True)
+    rt.alloc("a", np.zeros(1 << 16))
+    rt.finalize()
+    rt._prediction = ["x", "y", "z"]
+    rt._pred_index = {"x": 0, "y": 1, "z": 2}
+    rt._trace_pos = 1  # next predicted fetch is y
+    rt._resident = {"x": 100, "y": 100, "z": 100}
+    rt.cache_region_bytes = 300
+    # requester at distance 0 (y): only strictly-farther residents go; x is
+    # the farthest (wraps to next iteration) so it is evicted before z
+    got = rt._evict_for(100, next_use=0, protect=set())
+    assert got == 100
+    assert rt._resident["y"] == 100      # the requester's peer: kept
+    assert rt._resident["x"] == 0        # farthest: evicted first
+    assert rt._resident["z"] == 100      # z (distance 1) not needed
+
+
+def test_unpredicted_resident_is_first_victim():
+    rt = _rt(0.2, pipeline=True)
+    rt.alloc("a", np.zeros(1 << 16))
+    rt.finalize()
+    rt._prediction = ["x"]
+    rt._pred_index = {"x": 0}
+    rt._trace_pos = 0
+    rt._resident = {"x": 100, "stale": 200}
+    rt.cache_region_bytes = 300
+    got = rt._evict_for(150, next_use=0, protect=set())
+    assert got == 150
+    assert rt._resident["stale"] == 0
+    assert rt._resident["x"] == 100
+
+
+# -- batched scatter-gather reads ------------------------------------------
+def test_store_batch_read_orders_completions_and_amortizes_base():
+    clock = SimClock()
+    store = RemoteStore(clock=clock, fabric=INFINIBAND_100G)
+    store.alloc("a", np.zeros(1 << 18))
+    store.alloc("b", np.zeros(1 << 18))
+    store.alloc("c", np.zeros(1 << 18))
+    reqs = [("a", 1 << 18), ("b", 1 << 18), ("c", 1 << 18)]
+    done = store.stream_read_batch(reqs, chunk_bytes=1 << 16, issue_at=0.0)
+    # earlier window entries complete first (cumulative stream)
+    assert done["a"] < done["b"] < done["c"]
+    # one posted op spanning all extents: base paid once, so the batch beats
+    # three separately posted streams on a fresh identical store
+    solo_store = RemoteStore(clock=SimClock(), fabric=INFINIBAND_100G)
+    t = 0.0
+    for name in "abc":
+        solo_store.alloc(name, np.zeros(1 << 18))
+        t = solo_store.stream_read(name, nbytes=1 << 18, chunk_bytes=1 << 16,
+                                   issue_at=t, mode="pipelined")
+    assert done["c"] < t
+    assert store.stats()["n_ops"] == 1  # one scatter-gather op
+
+
+def test_pool_batch_read_spreads_nodes_and_respects_raw():
+    clock = SimClock()
+    pool = MemoryPool(4, clock=clock, fabric=INFINIBAND_100G,
+                      stripe_bytes=1 << 16)
+    data = np.arange(1 << 16, dtype=np.float64)  # 512 KiB -> 8 extents
+    pool.alloc("a", data)
+    pool.alloc("b", data)
+    end_w = pool.write("a", data * 2, timeline="w")
+    done = pool.stream_read_batch([("a", data.nbytes), ("b", data.nbytes)],
+                                  chunk_bytes=1 << 16, issue_at=0.0)
+    assert done["a"] >= end_w  # RAW: batch ordered after the pending write
+    # the batch streamed on several nodes' QPs concurrently
+    touched = [n for n in pool.nodes if n.stats()["bytes_read"] > 0]
+    assert len(touched) >= 2
+    # a 4-node batch completes faster than the same bytes on one node
+    single = MemoryPool(1, clock=SimClock(), fabric=INFINIBAND_100G,
+                        stripe_bytes=1 << 16)
+    single.alloc("a", data)
+    single.alloc("b", data)
+    done1 = single.stream_read_batch([("a", data.nbytes), ("b", data.nbytes)],
+                                     chunk_bytes=1 << 16, issue_at=0.0)
+    assert max(done.values()) < max(done1.values())
+
+
+# -- satellite fixes --------------------------------------------------------
+def test_cache_occupancy_sums_resident_objects():
+    """`peak_local_bytes` must reflect *both* remote objects cached in the
+    same step, not just the last-touched one."""
+    rt = _rt(0.8, dual_buffer=False)
+    rt.alloc("o0", np.zeros(1 << 16))
+    rt.alloc("o1", np.zeros(1 << 16))
+    rt.finalize()
+    with rt.step():
+        rt.fetch("o0")
+        rt.fetch("o1")
+    one = rt.metadata.get("o0").size_bytes
+    # the old accounting overwrote occupancy with the last-touched object,
+    # capping the peak at a single object's size
+    assert rt._peak_cached > one
+    assert rt._peak_cached <= rt.cache_region_bytes
+
+
+def test_peak_local_still_within_capacity():
+    rt = _rt(0.3, pipeline=True)
+    rt.alloc("a", np.zeros(1 << 18))
+    rt.alloc("b", np.zeros(1 << 16))
+    rt.finalize()
+    for _ in range(2):
+        with rt.step():
+            rt.fetch("a")
+            rt.fetch("b")
+    assert rt.peak_local_bytes() <= rt.local_capacity_bytes()
+
+
+def test_local_commit_reuses_buffer():
+    """LOCAL-tier commit must not allocate a fresh array every iteration."""
+    rt = DolmaRuntime(local_fraction=1.0)
+    rt.alloc("x", np.arange(8.0))
+    rt.finalize()
+    buf = rt._live["x"].data
+    with rt.step():
+        x = rt.fetch("x")
+        rt.commit("x", x + 1.0)          # fresh array: copied into place
+    assert rt._live["x"].data is buf     # same buffer, no realloc
+    assert np.all(rt.fetch("x") == np.arange(8.0) + 1.0)
+    with rt.step():
+        rt.commit("x", rt.fetch("x"))    # committing the buffer itself: no-op
+    assert rt._live["x"].data is buf
+    with rt.step():
+        view = rt.fetch("x")[::-1]       # aliasing view: must full-copy
+        rt.commit("x", view)
+    assert np.all(rt._live["x"].data == (np.arange(8.0) + 1.0)[::-1])
+
+
+def test_run_workload_delegates_to_run_iterative():
+    """One driver: run_workload and run_iterative agree exactly."""
+    from repro.core import run_iterative
+
+    w1 = WORKLOADS["MG"](scale=SCALE, seed=2)
+    r1 = run_workload(w1, _rt(0.2, pipeline=True), 3)
+    rt2 = _rt(0.2, pipeline=True)
+    w2 = WORKLOADS["MG"](scale=SCALE, seed=2)
+    w2.register(rt2)
+    rt2.finalize()
+    elapsed = run_iterative(rt2, 3, w2.iterate)
+    assert elapsed == r1.elapsed_us
+    assert w2.checksum(rt2) == r1.checksum
