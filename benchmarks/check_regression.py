@@ -1,0 +1,86 @@
+"""Perf-regression gate: compare a fresh --bench-json run to the baseline.
+
+The committed ``BENCH_pr3.json`` is the repo's perf contract: the trace
+pipeline's speedup over the legacy dual buffer, per workload. This script
+fails (exit 1) when any workload's ``pipeline_speedup`` drops more than
+``--tolerance`` (default 10%) below the baseline, so the PR-3 latency-hiding
+gains cannot silently regress. CI runs it in the ``bench-regression`` job;
+run it locally the same way:
+
+    PYTHONPATH=src python -m benchmarks.run --bench-json /tmp/bench.json
+    python -m benchmarks.check_regression --current /tmp/bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "BENCH_pr3.json"
+DEFAULT_TOLERANCE = 0.10
+METRIC = "pipeline_speedup"
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
+    """Return a list of human-readable regression findings (empty = pass)."""
+    problems: list[str] = []
+    base_wl = baseline.get("workloads", {})
+    cur_wl = current.get("workloads", {})
+    missing = sorted(set(base_wl) - set(cur_wl))
+    if missing:
+        problems.append(f"workloads missing from current run: {missing}")
+    for name in sorted(set(base_wl) & set(cur_wl)):
+        base = base_wl[name].get(METRIC)
+        cur = cur_wl[name].get(METRIC)
+        if base is None or cur is None:
+            problems.append(f"{name}: {METRIC} missing from one side")
+            continue
+        floor = base * (1.0 - tolerance)
+        if cur < floor:
+            problems.append(
+                f"{name}: {METRIC} {cur:.3f} < floor {floor:.3f} "
+                f"(baseline {base:.3f}, tolerance {tolerance:.0%})"
+            )
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--baseline",
+        default=DEFAULT_BASELINE,
+        help=f"committed baseline JSON (default {DEFAULT_BASELINE})",
+    )
+    parser.add_argument(
+        "--current", required=True, help="fresh --bench-json output to check"
+    )
+    parser.add_argument(
+        "--tolerance",
+        type=float,
+        default=DEFAULT_TOLERANCE,
+        help="allowed relative speedup drop (default 0.10)",
+    )
+    args = parser.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    problems = compare(baseline, current, args.tolerance)
+    base_wl = baseline.get("workloads", {})
+    cur_wl = current.get("workloads", {})
+    for name in sorted(set(base_wl) & set(cur_wl)):
+        base = base_wl[name].get(METRIC, float("nan"))
+        cur = cur_wl[name].get(METRIC, float("nan"))
+        print(f"check_regression/{name},{cur:.3f},baseline={base:.3f}")
+    if problems:
+        for p in problems:
+            print(f"REGRESSION: {p}", file=sys.stderr)
+        return 1
+    print(f"check_regression/ok,{len(cur_wl)},tolerance={args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.core.objects import ObjectCatalog, ObjectKind
-from repro.core.placement import PlacementPolicy
 from repro.core.tiering import TieringConfig, plan_for_params
 from repro.hpc import WORKLOADS
 from repro.models import get_model, make_batch

@@ -96,8 +96,9 @@ def _workload(pool: MemoryPool, *, kill_node: int | None, recover: bool) -> dict
 
 
 def failure_sweep() -> dict:
-    mk = lambda: MemoryPool(4, fabric=INFINIBAND_100G,
-                            stripe_bytes=1 * MIB, replication=2)
+    def mk():
+        return MemoryPool(4, fabric=INFINIBAND_100G,
+                          stripe_bytes=1 * MIB, replication=2)
     clean = _workload(mk(), kill_node=None, recover=False)
     degraded = _workload(mk(), kill_node=1, recover=False)
     recovered = _workload(mk(), kill_node=1, recover=True)

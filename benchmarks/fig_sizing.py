@@ -1,0 +1,109 @@
+"""Quantitative sizing: predicted-vs-simulated curves + advised size.
+
+For every HPC workload: record one instrumented oracle profile, sweep local
+fractions comparing the cost model's predicted elapsed_us against the
+simulator (model contract: within MODEL_TOLERANCE, §DESIGN.md §7 — in
+practice the single-node replay is exact), then run the sizing solver and
+*re-simulate at the advised budget* to check the paper's headline knee:
+<=16% degradation vs the untiered oracle at large memory savings (the paper
+reports up to 63%; mean saving across workloads is asserted >= 40%).
+"""
+from __future__ import annotations
+
+from repro.core.dual_buffer import DolmaRuntime
+from repro.core.sizing import (
+    MODEL_TOLERANCE,
+    CostModel,
+    ModelConfig,
+    advise_local_size,
+)
+from repro.hpc import WORKLOADS, profile_workload, run_workload
+
+from benchmarks.common import emit, save_json
+
+SCALE = 0.2
+SIM_SCALE = 1000.0 / SCALE
+N_ITERS = 10
+FRACTIONS = [0.02, 0.05, 0.1, 0.25, 0.5, 0.75]
+DEGRADATION_TARGET = 0.16
+MIN_MEAN_SAVING = 0.40
+
+
+def _rt(frac, **kw):
+    return DolmaRuntime(local_fraction=frac, sim_scale=SIM_SCALE, **kw)
+
+
+def run() -> dict:
+    table: dict[str, dict] = {}
+    savings: list[float] = []
+    worst_err = 0.0
+    for name, cls in WORKLOADS.items():
+        profile = profile_workload(cls(scale=SCALE, seed=3),
+                                   _rt(1.0))
+        model = CostModel(profile)
+        cfg = ModelConfig(mode="pipeline", n_iters=N_ITERS)
+
+        # predicted-vs-simulated degradation curve
+        curve = []
+        for frac in FRACTIONS:
+            pred = model.predict(local_fraction=frac, config=cfg).elapsed_us
+            sim = run_workload(cls(scale=SCALE, seed=3),
+                               _rt(frac, pipeline=True), N_ITERS).elapsed_us
+            err = abs(pred - sim) / sim
+            worst_err = max(worst_err, err)
+            assert err <= MODEL_TOLERANCE, (
+                f"{name} f={frac}: model error {err:.3f} > {MODEL_TOLERANCE}"
+            )
+            curve.append({"fraction": frac, "predicted_us": pred,
+                          "simulated_us": sim, "rel_error": err})
+
+        # the solver, then the advised budget re-simulated against the oracle
+        advice = advise_local_size(profile, DEGRADATION_TARGET, config=cfg)
+        oracle = run_workload(cls(scale=SCALE, seed=3), _rt(1.0), N_ITERS)
+        advised = run_workload(
+            cls(scale=SCALE, seed=3),
+            _rt(advice.advised_fraction, pipeline=True), N_ITERS)
+        assert advised.checksum == oracle.checksum
+        resim_deg = advised.elapsed_us / oracle.elapsed_us - 1.0
+        assert resim_deg <= DEGRADATION_TARGET + 1e-9, (
+            f"{name}: advised budget re-simulates at {resim_deg:.3f} "
+            f"> {DEGRADATION_TARGET}"
+        )
+        savings.append(advice.memory_saving)
+        table[name] = {
+            "curve": curve,
+            "advice": advice.summary(),
+            "resimulated_degradation": resim_deg,
+            "marginal": [
+                {"name": m.name, "size_bytes": m.size_bytes,
+                 "degradation_cost": m.degradation_cost}
+                for m in advice.marginal
+            ],
+        }
+        emit(f"fig_sizing/{name}", advised.elapsed_us,
+             f"advised_f={advice.advised_fraction:.3f} "
+             f"saving={advice.memory_saving:.2f} "
+             f"pred_deg={advice.degradation:.3f} resim_deg={resim_deg:.3f}")
+
+    mean_saving = sum(savings) / len(savings)
+    emit("fig_sizing/headline", 0.0,
+         f"mean_saving={mean_saving:.2f} worst_model_err={worst_err:.4f} "
+         f"target_deg={DEGRADATION_TARGET}")
+    assert mean_saving >= MIN_MEAN_SAVING, (
+        f"mean memory saving {mean_saving:.2f} < {MIN_MEAN_SAVING}"
+    )
+
+    payload = {
+        "table": table,
+        "mean_saving": mean_saving,
+        "worst_model_error": worst_err,
+        "degradation_target": DEGRADATION_TARGET,
+        "n_iters": N_ITERS,
+        "scale": SCALE,
+    }
+    save_json("fig_sizing", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

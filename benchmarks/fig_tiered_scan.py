@@ -62,10 +62,10 @@ def _model_bytes_and_flops():
     )
     stacked = params_abs["layers"]
     layer_bytes = sum(
-        l.size * l.dtype.itemsize for l in jax.tree.leaves(stacked)
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(stacked)
     ) // cfg.n_layers
     # matmul-dominated fwd cost: 2 * tokens * (weight matmul params) per layer
-    layer_params = sum(l.size for l in jax.tree.leaves(stacked)) / cfg.n_layers
+    layer_params = sum(x.size for x in jax.tree.leaves(stacked)) / cfg.n_layers
     layer_flops = 2.0 * BATCH * SEQ * layer_params
     return params_abs, cfg, layer_bytes, layer_flops
 

@@ -12,6 +12,7 @@ and writes structured JSON under benchmarks/results/.
   fig_pool — multi-node pool: nodes x stripe x failure (bandwidth + recovery)
   fig_tiered_scan — layer-scan ablation: remat x prefetch x local_fraction
   fig_pipeline — trace-driven prefetch: window x fraction x nodes sweep
+  fig_sizing — cost-model-vs-simulator curves + advised local size/workload
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
 
 ``--bench-json [PATH]`` runs a fast per-workload baseline (oracle vs legacy
@@ -98,6 +99,7 @@ def main() -> None:
         fig10_problem_sizes,
         fig_pipeline,
         fig_pool_scaling,
+        fig_sizing,
         fig_tiered_scan,
     )
 
@@ -112,6 +114,7 @@ def main() -> None:
         ("fig_pool", fig_pool_scaling),
         ("fig_tiered_scan", fig_tiered_scan),
         ("fig_pipeline", fig_pipeline),
+        ("fig_sizing", fig_sizing),
     ]
     failures = 0
     for name, mod in modules:

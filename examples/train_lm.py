@@ -16,7 +16,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
-from repro.core.tiering import TieringConfig, plan_for_params
+from repro.core.tiering import TieringConfig
 from repro.optim import AdamWConfig
 from repro.train.loop import LoopConfig, train
 from repro.train.step import TrainStepConfig

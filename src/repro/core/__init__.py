@@ -14,6 +14,14 @@ from repro.core.placement import PlacementPlan, PlacementPolicy, demotion_order
 from repro.core.pool import ExtentLostError, MemoryPool
 from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
+from repro.core.sizing import (
+    CostModel,
+    ModelConfig,
+    SizingAdvice,
+    WorkloadProfile,
+    advise_local_size,
+    synthetic_profile,
+)
 from repro.core.tiering import (
     TieringConfig,
     blocked_remat_scan,
@@ -52,8 +60,14 @@ __all__ = [
     "Tier",
     "TieringConfig",
     "TwoLevelScheduler",
+    "CostModel",
+    "ModelConfig",
+    "SizingAdvice",
+    "WorkloadProfile",
+    "advise_local_size",
     "blocked_remat_scan",
     "demotion_order",
+    "synthetic_profile",
     "grad_safe_barrier",
     "leaf_sharding",
     "plan_for_params",

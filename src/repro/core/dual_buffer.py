@@ -64,7 +64,7 @@ class DolmaRuntime:
     def __init__(
         self,
         *,
-        local_fraction: float = 1.0,
+        local_fraction: float | str = 1.0,
         fabric: FabricModel = INFINIBAND_100G,
         dual_buffer: bool = True,
         sync_writes: bool = False,
@@ -77,10 +77,20 @@ class DolmaRuntime:
         store: RemoteStore | MemoryPool | None = None,
         pipeline: bool = False,
         prefetch_window: int = 4,
+        record_profile: bool = False,
+        degradation_target: float = 0.16,
+        sizing_profile: "Any | None" = None,
+        sizing_iters: int = 10,
     ) -> None:
         # sim_scale: fabric/compute costs are charged at sim_scale x the real
         # array bytes, so small (fast, testable) arrays model paper-scale
         # objects with no distortion of base-latency/window ratios.
+        if local_fraction == "auto":
+            pass  # sized at finalize() by the cost-model solver (core.sizing)
+        elif isinstance(local_fraction, str):
+            raise ValueError(
+                f"local_fraction must be a float or 'auto', got {local_fraction!r}"
+            )
         self.local_fraction = local_fraction
         self.fabric = fabric
         self.dual_buffer = dual_buffer
@@ -134,6 +144,19 @@ class DolmaRuntime:
             "demand_bytes": 0, "batched_reads": 0, "evictions": 0,
             "dropped_mispredicts": 0,
         }
+        # --- quantitative sizing (core.sizing) ---
+        # record_profile: keep the full per-step (fetch/commit/compute) event
+        # stream so profile() can export a WorkloadProfile for the cost model
+        self.record_profile = record_profile
+        self.degradation_target = degradation_target
+        # horizon the "auto" solver prices over; the warmup (trace-miss)
+        # iteration amortizes across it, so it should match the planned run
+        # length — repro.hpc.run_workload sets it to the driven n_iters
+        self.sizing_iters = max(int(sizing_iters), 1)
+        self._sizing_profile = sizing_profile
+        self.sizing_advice = None  # populated by the "auto" finalize path
+        self._step_events: list[tuple[str, Any]] = []
+        self._profile_steps: list[list[tuple[str, Any]]] = []
 
     # -- allocation interception ------------------------------------------
     def alloc(
@@ -164,8 +187,61 @@ class DolmaRuntime:
         self._live[name] = _LiveObject(obj, np.array(array, copy=True))
         return name
 
+    def attach_profile(self, profile: Any) -> None:
+        """Attach a :class:`~repro.core.sizing.WorkloadProfile` for the
+        ``local_fraction="auto"`` finalize path (recorded by a warmup run on
+        an instrumented oracle runtime, or built synthetically)."""
+        self._sizing_profile = profile
+
+    def _auto_size(self) -> int:
+        """Run the sizing solver; returns the advised local budget (bytes)."""
+        from repro.core.sizing import ModelConfig, advise_local_size
+
+        if self._sizing_profile is None:
+            raise RuntimeError(
+                "local_fraction='auto' needs a WorkloadProfile: run a "
+                "DolmaRuntime(record_profile=True) warmup and attach_profile()"
+                " its .profile() — repro.hpc.run_workload does this for you"
+            )
+        pooled = isinstance(self.store, MemoryPool)
+        # same plan-level capacity conversion finalize() applies, so the
+        # priced plan matches the installed one on capacity-bounded pools
+        plan_capacity = None
+        if pooled and self.store.nodes[0].capacity_bytes is not None:
+            plan_capacity = int(
+                self.store.nodes[0].capacity_bytes * self.sim_scale
+                / self.store.replication
+            )
+        cfg = ModelConfig(
+            fabric=self.fabric,
+            n_nodes=self.store.n_nodes if pooled else 1,
+            window=self.prefetch_window,
+            n_iters=self.sizing_iters,
+            node_capacity_bytes=plan_capacity,
+            mode=("pipeline" if self.pipeline
+                  else "legacy" if self.dual_buffer else "serial"),
+            stripe_bytes=(self.store.stripe_bytes if pooled
+                          else ModelConfig.stripe_bytes),
+            replication=self.store.replication if pooled else 1,
+            qps_per_node=len(self.store.nodes[0].resources) if pooled
+            else len(self.store.resources),
+        )
+        advice = advise_local_size(
+            self._sizing_profile, self.degradation_target,
+            policy=self.policy, config=cfg,
+        )
+        self.sizing_advice = advice
+        self.local_fraction = advice.advised_fraction
+        return advice.advised_budget_bytes
+
     def finalize(self) -> PlacementPlan:
-        """Run placement, demote REMOTE objects, size the cache region."""
+        """Run placement, demote REMOTE objects, size the cache region.
+
+        With ``local_fraction="auto"``, the cost-model solver
+        (:func:`repro.core.sizing.advise_local_size`) picks the budget first
+        from the attached workload profile and the degradation target.
+        """
+        auto_budget = self._auto_size() if self.local_fraction == "auto" else None
         catalog = ObjectCatalog(lo.obj for lo in self._live.values())
         pooled = isinstance(self.store, MemoryPool)
         # Plan-level node capacity works in the plan's (sim-scaled) units and
@@ -180,7 +256,8 @@ class DolmaRuntime:
             )
         plan = self.policy.plan(
             catalog,
-            local_fraction=self.local_fraction,
+            local_fraction=None if auto_budget is not None else self.local_fraction,
+            local_budget_bytes=auto_budget,
             n_nodes=self.store.n_nodes if pooled else 1,
             node_capacity_bytes=plan_capacity,
         )
@@ -286,11 +363,15 @@ class DolmaRuntime:
         self._check_final()
         self._read_set.clear()
         self._trace = []
+        self._step_events = []
         self._fetch_done.clear()
         self._settle_cache_occupancy()
         self._fetches_done_at = self.clock.now(self.timeline)
         yield self
         self._epoch += 1
+        if self.record_profile:
+            self._profile_steps.append(self._step_events)
+            self._step_events = []
         if self.pipeline:
             if self._stream_debt > 0.0:  # step barrier: all reads landed
                 self.clock.wait_until(self.timeline, self._stream_debt)
@@ -326,8 +407,11 @@ class DolmaRuntime:
         self._check_final()
         self._read_set.add(name)
         self._trace.append(("fetch", name))
+        if self.record_profile:
+            self._step_events.append(("fetch", name))
         lo = self._live[name]
         meta = self.metadata.get(name)
+        meta.n_fetches += 1
         # reuse-distance trace stat: fetch events since this object's last use
         idx = self._event_idx
         self._event_idx += 1
@@ -370,8 +454,11 @@ class DolmaRuntime:
         """
         self._check_final()
         self._trace.append(("commit", name))
+        if self.record_profile:
+            self._step_events.append(("commit", name))
         lo = self._live[name]
         meta = self.metadata.get(name)
+        meta.n_commits += 1
         array = np.asarray(array)
         if meta.tier is not Tier.REMOTE:
             cur = lo.data
@@ -420,6 +507,8 @@ class DolmaRuntime:
             flop_us = flops * self.sim_scale / (self.compute_gflops * 1e3)
             mem_us = bytes_touched * self.sim_scale / (self.local_mem.read_gbps * 1e3)
             us = max(flop_us, mem_us)
+        if self.record_profile:
+            self._step_events.append(("compute", us))
         t = self.clock.advance(self.timeline, us)
         if self._stream_debt > 0.0:
             t = self.clock.wait_until(self.timeline, self._stream_debt)
@@ -446,6 +535,51 @@ class DolmaRuntime:
     def last_trace(self) -> list[tuple[str, str]]:
         """The most recent step's (op, name) access trace."""
         return list(self._trace)
+
+    def profile(self) -> "Any":
+        """Export the recorded run as a WorkloadProfile for the cost model.
+
+        Requires ``record_profile=True`` and at least one completed step;
+        usually recorded on an untiered oracle runtime (local_fraction=1.0)
+        so the event stream carries pure compute charges. The stream itself
+        is placement-independent (bodies fetch/commit/charge identically at
+        every fraction), so one recording prices every candidate budget.
+        """
+        from repro.core.sizing import ObjectProfile, WorkloadProfile
+
+        if not self.record_profile:
+            raise RuntimeError("profile() needs DolmaRuntime(record_profile=True)")
+        if not self._profile_steps:
+            raise RuntimeError("profile() needs at least one completed step()")
+        objects = {}
+        for name, lo in self._live.items():
+            meta = self.metadata.get(name)
+            objects[name] = ObjectProfile(
+                name=name,
+                size_bytes=lo.obj.size_bytes,
+                real_nbytes=max(
+                    int(np.prod(lo.obj.shape, dtype=np.int64))
+                    * np.dtype(lo.obj.dtype).itemsize,
+                    1,
+                ),
+                kind=lo.obj.kind.value,
+                n_reads=lo.obj.n_reads,
+                n_writes=lo.obj.n_writes,
+                lifetime_iters=lo.obj.lifetime_iters,
+                pinned_local=lo.obj.pinned_local,
+                n_fetch_events=meta.n_fetches,
+                n_commit_events=meta.n_commits,
+                reuse_distance=meta.reuse_distance,
+            )
+        frac = self.local_fraction if isinstance(self.local_fraction, float) else 1.0
+        return WorkloadProfile(
+            objects=objects,
+            steps=[list(step) for step in self._profile_steps],
+            sim_scale=self.sim_scale,
+            compute_gflops=self.compute_gflops,
+            fabric_name=self.fabric.name,
+            recorded_fraction=frac,
+        )
 
     def predicted_order(self) -> list[str]:
         """Remote-object fetch order predicted from the recorded trace."""
@@ -708,7 +842,13 @@ def run_iterative(
     warmup-trace pass — the runtime records the access order the body emits
     through fetch/commit, and from the second iteration on that trace drives
     the sliding prefetch window.
+
+    Auto-sizing mode: a runtime still carrying ``local_fraction="auto"`` is
+    finalized here (the attached profile feeds the sizing solver) so callers
+    driving the loop directly get the advised budget without extra plumbing.
     """
+    if runtime.local_fraction == "auto" and not runtime._finalized:
+        runtime.finalize()
     for it in range(n_iters):
         with runtime.step():
             body(runtime, it)

@@ -20,7 +20,6 @@ are reproducible on a single CPU core.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import itertools
 import threading
 

@@ -40,6 +40,10 @@ class ObjectMeta:
     # trace stats (fed by the runtime's access recorder): fetch-event distance
     # between the last two uses — the reuse signal Belady-from-trace evicts by
     reuse_distance: int | None = None
+    # observed access counters (runtime recorder) — exported by
+    # DolmaRuntime.profile() as the cost model's per-object census
+    n_fetches: int = 0
+    n_commits: int = 0
 
     def to_json(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -141,4 +145,12 @@ class MetadataTable:
                 m.name: m.reuse_distance
                 for m in self._table.values()
                 if m.reuse_distance is not None
+            }
+
+    def access_counts(self) -> dict[str, tuple[int, int]]:
+        """Observed (n_fetches, n_commits) per object — profile census."""
+        with self._lock:
+            return {
+                m.name: (m.n_fetches, m.n_commits)
+                for m in self._table.values()
             }

@@ -104,10 +104,13 @@ class PlacementPolicy:
         self,
         catalog: ObjectCatalog,
         *,
-        local_fraction: float | None = None,
-        local_budget_bytes: int | None = None,
+        local_fraction: float | str | None = None,
+        local_budget_bytes: int | str | None = None,
         n_nodes: int = 1,
         node_capacity_bytes: int | None = None,
+        profile: "object | None" = None,
+        degradation_target: float = 0.16,
+        sizing_config: "object | None" = None,
     ) -> PlacementPlan:
         """Demote ranked objects until local usage fits the budget.
 
@@ -115,7 +118,30 @@ class PlacementPolicy:
         memory node, greedily least-loaded-first; ``node_capacity_bytes`` is
         a hard per-node constraint — an object that fits on no node is kept
         LOCAL (remote capacity, like local capacity, is finite at rack scale).
+
+        Passing ``"auto"`` for either budget knob invokes the quantitative
+        sizing solver (:func:`repro.core.sizing.advise_local_size`) on the
+        supplied ``profile`` (a ``WorkloadProfile``): the budget becomes the
+        smallest one whose predicted degradation meets
+        ``degradation_target``; ``sizing_config`` (a ``ModelConfig``) sets
+        the fabric/topology the cost model prices against.
         """
+        if local_fraction == "auto" or local_budget_bytes == "auto":
+            if profile is None:
+                raise ValueError(
+                    "budget 'auto' needs a WorkloadProfile (profile=...): "
+                    "record one with DolmaRuntime(record_profile=True)"
+                )
+            from repro.core.sizing import advise_local_size
+
+            advice = advise_local_size(
+                profile, degradation_target, policy=self,
+                **({"config": sizing_config} if sizing_config is not None
+                   else {"n_nodes": n_nodes,
+                         "node_capacity_bytes": node_capacity_bytes}),
+            )
+            local_budget_bytes = advice.advised_budget_bytes
+            local_fraction = None
         peak = catalog.total_bytes
         if local_budget_bytes is None:
             if local_fraction is None:

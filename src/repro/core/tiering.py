@@ -63,8 +63,12 @@ TieringMode = Literal["none", "host_offload", "fsdp_stream"]
 @dataclasses.dataclass(frozen=True)
 class TieringConfig:
     mode: TieringMode = "fsdp_stream"
-    # Fraction of (param + opt state) bytes allowed to stay in HBM.
-    local_fraction: float = 1.0
+    # Fraction of (param + opt state) bytes allowed to stay in HBM; "auto"
+    # defers to the cost-model sizing solver (plan_for_params needs a
+    # WorkloadProfile then — see repro.core.sizing).
+    local_fraction: float | str = 1.0
+    # Degradation target the "auto" solver sizes for (paper knee: 16%).
+    degradation_target: float = 0.16
     prefetch: bool = True  # dual-buffer prefetch in the layer scan
     # Keep the dual buffer on when the layer scan is rematerialized: the
     # prefetch carry moves inside the block-level remat boundary (recomputed,
@@ -127,6 +131,7 @@ def plan_for_params(
     config: TieringConfig,
     opt_state: Any = None,
     access_counts: dict[str, int] | None = None,
+    profile: Any = None,
 ) -> PlacementPlan:
     """Build a placement plan over the persistent objects of a train step.
 
@@ -134,6 +139,12 @@ def plan_for_params(
     optimizer moments are read+written once. Those defaults reproduce the
     policy inputs DOLMA's allocator interposition observes; callers may
     override with measured ``access_counts`` from an ObjectCatalog trace.
+
+    With ``config.local_fraction == "auto"`` the HBM budget is chosen by the
+    quantitative sizing solver: pass a recorded ``WorkloadProfile``, or omit
+    ``profile`` to have one synthesized from this catalog (each leaf fetched
+    once per step — :func:`repro.core.sizing.synthetic_profile`) with the
+    step's compute time estimated from leaf bytes at HBM bandwidth.
     """
     catalog = ObjectCatalog()
     for path, leaf in jax.tree_util.tree_leaves_with_path(params):
@@ -166,7 +177,21 @@ def plan_for_params(
                     n_writes=1,
                 )
             )
-    return PlacementPolicy().plan(catalog, local_fraction=config.local_fraction)
+    if config.local_fraction == "auto" and profile is None:
+        from repro.core.fabric import TPU_V5E_HBM_GBPS
+        from repro.core.sizing import synthetic_profile
+
+        # one read of every leaf per step at HBM stream rate approximates the
+        # step's compute floor — enough for the solver to price demotions
+        compute_us = catalog.total_bytes / (TPU_V5E_HBM_GBPS * 1e3)
+        profile = synthetic_profile(catalog, compute_us_per_step=compute_us,
+                                    source="plan_for_params")
+    return PlacementPolicy().plan(
+        catalog,
+        local_fraction=config.local_fraction,
+        profile=profile,
+        degradation_target=config.degradation_target,
+    )
 
 
 def leaf_sharding(

@@ -1,5 +1,11 @@
 """The paper's eight evaluated workloads, implemented on DolmaRuntime."""
-from repro.hpc.base import HPCWorkload, WorkloadResult, pooled_runtime, run_workload
+from repro.hpc.base import (
+    HPCWorkload,
+    WorkloadResult,
+    pooled_runtime,
+    profile_workload,
+    run_workload,
+)
 from repro.hpc.bt import BT
 from repro.hpc.cg import CG
 from repro.hpc.ft import FT
@@ -22,5 +28,5 @@ WORKLOADS = {
 
 __all__ = [
     "HPCWorkload", "WORKLOADS", "WorkloadResult", "pooled_runtime",
-    "run_workload",
+    "profile_workload", "run_workload",
 ] + list(WORKLOADS)

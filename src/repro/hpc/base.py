@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.core.dual_buffer import DolmaRuntime, run_iterative
 from repro.core.fabric import FabricModel, INFINIBAND_100G
-from repro.core.objects import ObjectKind
 from repro.core.pool import MemoryPool
 
 MB = 1 << 20
@@ -85,7 +84,7 @@ class HPCWorkload:
 def pooled_runtime(
     n_nodes: int,
     *,
-    local_fraction: float,
+    local_fraction: float | str,
     replication: int = 1,
     stripe_bytes: int = 1 << 20,
     qps_per_node: int = 1,
@@ -109,10 +108,43 @@ def pooled_runtime(
                         store=pool, **runtime_kwargs)
 
 
+def profile_workload(
+    workload: HPCWorkload,
+    rt: DolmaRuntime,
+    *,
+    profile_iters: int = 2,
+):
+    """One instrumented oracle warmup: record and return a WorkloadProfile.
+
+    The recording runtime clones ``rt``'s cost-model knobs (fabric,
+    sim_scale, compute model) but keeps everything local, so the exported
+    event stream carries pure compute charges — exactly what the sizing
+    cost model replays against candidate budgets. Registering the same
+    workload instance twice is safe: all mutable state lives in the runtime
+    (checksums stay bit-identical), and the RNG is consumed in __init__.
+    """
+    prof_rt = DolmaRuntime(
+        local_fraction=1.0,
+        fabric=rt.fabric,
+        sim_scale=rt.sim_scale,
+        compute_gflops=rt.compute_gflops,
+        local_mem=rt.local_mem,
+        record_profile=True,
+    )
+    workload.register(prof_rt)
+    prof_rt.finalize()
+    run_iterative(prof_rt, max(profile_iters, 1), workload.iterate)
+    profile = prof_rt.profile()
+    profile.source = workload.name
+    return profile
+
+
 def run_workload(
     workload: HPCWorkload,
     rt: DolmaRuntime,
     n_iters: int = 5,
+    *,
+    profile_iters: int = 2,
 ) -> WorkloadResult:
     """Register, finalize, and drive the workload through ``run_iterative``.
 
@@ -121,7 +153,17 @@ def run_workload(
     pipeline mode the first iteration doubles as the warmup-trace pass: the
     runtime records the fetch/commit order the workload emits, and the
     recorded trace drives the sliding prefetch window from iteration 1 on.
+
+    Auto-sizing (``rt.local_fraction == "auto"``): an instrumented oracle
+    warmup of ``profile_iters`` steps records the workload's access profile
+    first, and ``rt.finalize()`` hands it to the cost-model solver, which
+    picks the smallest local budget meeting ``rt.degradation_target``.
     """
+    if rt.local_fraction == "auto":
+        rt.sizing_iters = n_iters  # price the horizon actually driven
+        if rt._sizing_profile is None:
+            rt.attach_profile(profile_workload(workload, rt,
+                                               profile_iters=profile_iters))
     workload.register(rt)
     rt.finalize()
     elapsed = run_iterative(rt, n_iters, workload.iterate)

@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.flash import reference_attention as _ref_attn
-from repro.models.ssm import ssd_reference_recurrent
 
 
 def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -34,7 +33,8 @@ def ssd_ref(xc, bc, cc, dtc, cum):
     """
     B, H, nc, Q, P = xc.shape
     N = bc.shape[-1]
-    to_flat = lambda t, tail: jnp.moveaxis(t, 1, 3).reshape(B, nc * Q, H, *tail)
+    def to_flat(t, tail):
+        return jnp.moveaxis(t, 1, 3).reshape(B, nc * Q, H, *tail)
     xh = to_flat(xc, (P,))
     Bm = to_flat(bc, (N,))
     Cm = to_flat(cc, (N,))

@@ -289,14 +289,7 @@ def parse_module(text: str) -> ModuleAnalysis:
             operand_names = _OPERANDS.findall(args_part)
             contract = 1
             if lhs_dims and operand_names:
-                lhs_shape = shapes.get(operand_names[0], [])
-                dims_str = _SHAPE_RE.search(
-                    # reconstruct dims of first operand from its def
-                    " ".join(
-                        f"{dt}[{n}]" for dt, n in lhs_shape
-                    )
-                )
-                # need actual dim list; re-parse from def line storage
+                # actual dim list comes from the def-line storage
                 contract = _contract_elems(
                     shapes_raw=_raw_dims.get((cur_name, operand_names[0])),
                     dims=lhs_dims.group(1),

@@ -12,7 +12,6 @@ CPU-demo sizes by default; pass --full to use the architecture's real config
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
 import jax

@@ -266,7 +266,8 @@ def opt_pspec_tree(opt_abs, params_pspecs, mesh: Mesh | None = None):
     """
     import jax.tree_util as jtu
 
-    is_spec = lambda x: isinstance(x, P)
+    def is_spec(x):
+        return isinstance(x, P)
     by_path = {
         jtu.keystr(path): spec
         for path, spec in jtu.tree_leaves_with_path(params_pspecs, is_leaf=is_spec)

@@ -19,7 +19,6 @@ old "prefetch only when remat is off" caveat is retired (DESIGN.md §2).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -399,7 +398,6 @@ def decode_step(
     """One-token decode. tokens: (B, 1). Returns (logits[B,1,V], new cache)."""
     pos = cache["pos"]
     x = L.embed(params["embed"], tokens, cfg)
-    B = x.shape[0]
 
     if cfg.family in ("dense", "vlm", "moe"):
         if cfg.attention == "mla":

@@ -20,7 +20,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.optim.quantized import QTensor, dequantize, quantize
+from repro.optim.quantized import dequantize, quantize
 
 
 @dataclasses.dataclass(frozen=True)

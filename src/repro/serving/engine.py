@@ -162,7 +162,7 @@ class ServingEngine:
     def stats(self) -> dict:
         return {
             "cache_bytes": sum(
-                l.size * l.dtype.itemsize for l in jax.tree.leaves(self.cache)
+                x.size * x.dtype.itemsize for x in jax.tree.leaves(self.cache)
             ),
             "placement": self.placement.summary(),
             "pool": self.pool.stats() if self.pool is not None else None,

@@ -16,10 +16,9 @@ import collections
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig

@@ -11,7 +11,6 @@ Integrates the DOLMA pieces at the step level:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Async checkpoint manager: atomicity, delta encoding, elastic restore."""
-import json
 
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,8 @@
 """Placement policy (§4.1), object catalog, metadata table."""
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
@@ -13,7 +11,6 @@ from repro.core import (
     ObjectKind,
     ObjectMeta,
     PlacementPolicy,
-    SMALL_OBJECT_BYTES,
     Status,
     Tier,
     demotion_order,

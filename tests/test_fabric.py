@@ -31,6 +31,7 @@ class TestCalibration:
         """Paper §3.1(c)(ii): 512 KiB random remote write (60.4us) wins."""
         remote = INFINIBAND_100G.write_us(512 * 1024)
         local_rand = LOCAL_DDR.write_us(512 * 1024) * 1.5  # rand penalty ramp
+        assert remote < local_rand  # the §3.1(c)(ii) inversion itself
         assert remote < 150  # in the paper's measured ballpark
         assert ETHERNET_25G.write_us(512 * 1024) > remote
 

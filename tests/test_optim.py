@@ -13,7 +13,6 @@ from repro.optim import (
     decompress,
     init as adamw_init,
     init_error_feedback,
-    quantize_roundtrip,
     schedule,
     update,
 )

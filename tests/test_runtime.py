@@ -7,7 +7,6 @@ from repro.core import (
     ETHERNET_25G,
     INFINIBAND_100G,
     RemoteStore,
-    SimClock,
 )
 from repro.core.placement import PlacementPolicy
 from repro.hpc import WORKLOADS, run_workload

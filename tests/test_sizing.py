@@ -1,0 +1,216 @@
+"""Quantitative sizing: cost-model agreement, solver properties, plumbing.
+
+The contract under test (DESIGN.md §7):
+  * the cost model predicts simulated elapsed_us within MODEL_TOLERANCE on
+    every workload/mode/topology it prices (single-node replay is exact);
+  * the solver's advised budget is monotone in the degradation target and
+    actually meets the target when re-simulated;
+  * "auto" budgets thread through PlacementPolicy / DolmaRuntime /
+    run_workload / TieringConfig.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import DataObject, ObjectCatalog, ObjectKind
+from repro.core.dual_buffer import DolmaRuntime
+from repro.core.fabric import ETHERNET_25G
+from repro.core.placement import PlacementPolicy, demotion_order
+from repro.core.sizing import (
+    MODEL_TOLERANCE,
+    CostModel,
+    ModelConfig,
+    WorkloadProfile,
+    advise_local_size,
+    synthetic_profile,
+)
+from repro.hpc import WORKLOADS, pooled_runtime, profile_workload, run_workload
+
+SCALE = 0.2
+SIM = 1000.0 / SCALE
+N_ITERS = 5
+TARGET = 0.16
+
+
+def _rt(frac, **kw):
+    return DolmaRuntime(local_fraction=frac, sim_scale=SIM, **kw)
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    """One instrumented oracle recording per workload (shared, read-only)."""
+    return {
+        name: profile_workload(cls(scale=SCALE, seed=3), _rt(1.0))
+        for name, cls in WORKLOADS.items()
+    }
+
+
+# -- cost-model-vs-simulator agreement -------------------------------------
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_model_matches_simulator(name, profiles):
+    """Predicted elapsed_us within the stated tolerance on all 8 workloads."""
+    model = CostModel(profiles[name])
+    for frac in (0.05, 0.5):
+        pred = model.predict(
+            local_fraction=frac,
+            config=ModelConfig(mode="pipeline", n_iters=N_ITERS),
+        ).elapsed_us
+        sim = run_workload(WORKLOADS[name](scale=SCALE, seed=3),
+                           _rt(frac, pipeline=True), N_ITERS).elapsed_us
+        assert abs(pred - sim) / sim <= MODEL_TOLERANCE, (name, frac)
+
+
+def test_model_matches_simulator_legacy_and_serial(profiles):
+    model = CostModel(profiles["CG"])
+    for mode, rt_kw in (("legacy", {"dual_buffer": True}),
+                        ("serial", {"dual_buffer": False})):
+        pred = model.predict(
+            local_fraction=0.1, config=ModelConfig(mode=mode, n_iters=N_ITERS)
+        ).elapsed_us
+        sim = run_workload(WORKLOADS["CG"](scale=SCALE, seed=3),
+                           _rt(0.1, **rt_kw), N_ITERS).elapsed_us
+        assert abs(pred - sim) / sim <= MODEL_TOLERANCE, mode
+
+
+def test_model_matches_simulator_on_pool(profiles):
+    """The pool replay (striping + per-node QPs) tracks the simulator too."""
+    model = CostModel(profiles["FT"], policy=PlacementPolicy(all_large_remote=True))
+    for nodes in (2, 4):
+        pred = model.predict(
+            local_fraction=0.05,
+            config=ModelConfig(mode="pipeline", n_iters=N_ITERS,
+                               fabric=ETHERNET_25G, n_nodes=nodes),
+        ).elapsed_us
+        rt = pooled_runtime(nodes, local_fraction=0.05, sim_scale=SIM,
+                            fabric=ETHERNET_25G, pipeline=True,
+                            policy=PlacementPolicy(all_large_remote=True))
+        sim = run_workload(WORKLOADS["FT"](scale=SCALE, seed=3),
+                           rt, N_ITERS).elapsed_us
+        assert abs(pred - sim) / sim <= MODEL_TOLERANCE, nodes
+
+
+def test_model_oracle_prediction_is_pure_compute(profiles):
+    """At fraction 1.0 with the default policy nothing is remote: prediction
+    must equal the recorded per-step compute total."""
+    prof = profiles["CG"]
+    model = CostModel(prof)
+    pred = model.predict(local_fraction=1.0,
+                         config=ModelConfig(n_iters=3)).elapsed_us
+    assert pred == pytest.approx(model.predict_untiered(n_iters=3))
+    assert pred == pytest.approx(3 * prof.compute_us_per_step())
+
+
+# -- the solver -------------------------------------------------------------
+def test_advised_budget_meets_target_when_resimulated(profiles):
+    """Acceptance: every workload's advised budget re-simulates within the
+    16% degradation target, and mean memory saving is >= 40%."""
+    savings = []
+    for name, cls in WORKLOADS.items():
+        advice = advise_local_size(profiles[name], TARGET,
+                                   mode="pipeline", n_iters=N_ITERS)
+        assert advice.feasible, name
+        oracle = run_workload(cls(scale=SCALE, seed=3), _rt(1.0), N_ITERS)
+        advised = run_workload(cls(scale=SCALE, seed=3),
+                               _rt(advice.advised_fraction, pipeline=True),
+                               N_ITERS)
+        assert advised.checksum == oracle.checksum, name
+        deg = advised.elapsed_us / oracle.elapsed_us - 1.0
+        assert deg <= TARGET + 1e-9, (name, deg)
+        savings.append(advice.memory_saving)
+    assert sum(savings) / len(savings) >= 0.40
+
+
+@settings(max_examples=12)
+@given(t_lo=st.floats(min_value=0.005, max_value=0.25),
+       t_gap=st.floats(min_value=0.0, max_value=0.25))
+def test_solver_monotonicity(profiles, t_lo, t_gap):
+    """Tighter degradation target => advised local budget can only grow."""
+    profile = profiles["CG"]
+    a_tight = advise_local_size(profile, t_lo, n_iters=N_ITERS)
+    a_loose = advise_local_size(profile, t_lo + t_gap, n_iters=N_ITERS)
+    assert a_tight.advised_budget_bytes >= a_loose.advised_budget_bytes
+
+
+def test_degradation_curve_and_marginal_attribution(profiles):
+    prof = profiles["CG"]
+    advice = advise_local_size(prof, TARGET, n_iters=N_ITERS)
+    # the curve covers the whole budget axis and prices every point
+    budgets = [p.budget_bytes for p in advice.curve]
+    assert budgets == sorted(budgets, reverse=True)
+    assert all(p.predicted_us > 0 for p in advice.curve)
+    assert any(p.degradation > TARGET for p in advice.curve)  # sweep bites
+    # marginal attribution follows the policy's demotion order
+    order = [o.name for o in demotion_order(CostModel(prof).catalog)]
+    assert [m.name for m in advice.marginal] == order
+    assert advice.marginal[0].size_bytes >= advice.marginal[-1].size_bytes
+
+
+def test_profile_json_roundtrip(profiles):
+    prof = profiles["MG"]
+    clone = WorkloadProfile.from_json(prof.to_json())
+    cfg = ModelConfig(n_iters=3)
+    assert CostModel(clone).predict(local_fraction=0.1, config=cfg).elapsed_us \
+        == CostModel(prof).predict(local_fraction=0.1, config=cfg).elapsed_us
+
+
+# -- "auto" plumbing --------------------------------------------------------
+def test_placement_policy_auto_budget(profiles):
+    prof = profiles["CG"]
+    policy = PlacementPolicy()
+    catalog = CostModel(prof).catalog
+    plan = policy.plan(catalog, local_fraction="auto", profile=prof)
+    advice = advise_local_size(prof, policy=policy)
+    assert plan.budget_bytes == advice.advised_budget_bytes
+    with pytest.raises(ValueError, match="WorkloadProfile"):
+        policy.plan(catalog, local_fraction="auto")
+
+
+def test_runtime_auto_sizing_via_run_workload():
+    """local_fraction='auto' profiles, advises, and still bit-matches."""
+    cls = WORKLOADS["CG"]
+    oracle = run_workload(cls(scale=SCALE, seed=3), _rt(1.0), N_ITERS)
+    rt = _rt("auto", pipeline=True)
+    res = run_workload(cls(scale=SCALE, seed=3), rt, N_ITERS)
+    assert rt.sizing_advice is not None
+    assert isinstance(rt.local_fraction, float)
+    assert rt.local_fraction < 1.0
+    assert res.checksum == oracle.checksum
+    deg = res.elapsed_us / oracle.elapsed_us - 1.0
+    assert deg <= rt.degradation_target + 1e-9
+    assert rt.stats()["plan"]["memory_saving"] >= 0.40
+
+
+def test_runtime_auto_requires_profile():
+    rt = _rt("auto")
+    rt.alloc("x", np.zeros(64 * 1024, dtype=np.uint8))
+    with pytest.raises(RuntimeError, match="WorkloadProfile"):
+        rt.finalize()
+
+
+def test_runtime_rejects_unknown_fraction_string():
+    with pytest.raises(ValueError, match="auto"):
+        _rt("autosize")
+
+
+def test_synthetic_profile_prices_a_catalog():
+    catalog = ObjectCatalog([
+        DataObject(name=f"w{i}", shape=(1 << 20,), dtype=np.float32,
+                   kind=ObjectKind.PARAM, n_reads=2, n_writes=1)
+        for i in range(6)
+    ])
+    prof = synthetic_profile(catalog, compute_us_per_step=5000.0)
+    advice = advise_local_size(prof, TARGET, n_iters=4)
+    assert 0 < advice.advised_budget_bytes <= catalog.total_bytes
+    assert advice.oracle_us == pytest.approx(4 * 5000.0)
+
+
+def test_tiering_config_auto_plan():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.tiering import TieringConfig, plan_for_params
+
+    params = {f"layer{i}": jnp.zeros((256, 256), jnp.float32)
+              for i in range(4)}
+    config = TieringConfig(local_fraction="auto", degradation_target=0.5)
+    plan = plan_for_params(params, config=config)
+    assert plan.budget_bytes <= plan.peak_bytes
+    assert plan.peak_bytes == 4 * 256 * 256 * 4

@@ -54,7 +54,7 @@ def test_lm_training_end_to_end_with_tiering_decision():
     from repro.train.step import TrainStepConfig, init_train_state, make_train_step
 
     cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32)
-    model = get_model(cfg)
+    get_model(cfg)  # model construction smoke; the step functions re-build it
     params, opt_state = init_train_state(
         jax.random.PRNGKey(0), cfg, TrainStepConfig(), AdamWConfig(lr=3e-3,
                                                                    warmup_steps=2)
