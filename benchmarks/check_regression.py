@@ -1,14 +1,24 @@
-"""Perf-regression gate: compare a fresh --bench-json run to the baseline.
+"""Perf-regression gate: compare fresh --bench-json runs to the baselines.
 
-The committed ``BENCH_pr3.json`` is the repo's perf contract: the trace
-pipeline's speedup over the legacy dual buffer, per workload. This script
-fails (exit 1) when any workload's ``pipeline_speedup`` drops more than
-``--tolerance`` (default 10%) below the baseline, so the PR-3 latency-hiding
-gains cannot silently regress. CI runs it in the ``bench-regression`` job;
-run it locally the same way:
+Two committed perf contracts are enforced:
+
+* ``BENCH_pr3.json`` — the trace pipeline's speedup over the legacy dual
+  buffer, per workload. This script fails (exit 1) when any workload's
+  ``pipeline_speedup`` drops more than ``--tolerance`` (default 10%) below
+  the baseline, so the PR-3 latency-hiding gains cannot silently regress.
+* ``BENCH_pr5.json`` — the serving autoscaler under the drifting request
+  mix (``benchmarks/fig_autoscale.py --bench-json``). The gate checks that
+  the node trajectory matches the committed one exactly (the control loop
+  is deterministic by construction — compute charges are modeled, not
+  measured), that ``max_degradation`` stays under the committed target,
+  and that ``mean_saving`` has not dropped more than ``--tolerance``.
+
+CI runs both in the ``bench-regression`` job; run them locally the same way:
 
     PYTHONPATH=src python -m benchmarks.run --bench-json /tmp/bench.json
-    python -m benchmarks.check_regression --current /tmp/bench.json
+    PYTHONPATH=src python -m benchmarks.fig_autoscale --bench-json /tmp/pr5.json
+    python -m benchmarks.check_regression --current /tmp/bench.json \\
+        --pr5-current /tmp/pr5.json
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ import json
 import sys
 
 DEFAULT_BASELINE = "BENCH_pr3.json"
+DEFAULT_PR5_BASELINE = "BENCH_pr5.json"
 DEFAULT_TOLERANCE = 0.10
 METRIC = "pipeline_speedup"
 
@@ -44,41 +55,111 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list[str]:
     return problems
 
 
+def compare_autoscale(baseline: dict, current: dict, tolerance: float) -> list[str]:
+    """Gate the autoscaler contract (empty = pass).
+
+    The trajectory is compared exactly: the loop is driven by modeled
+    compute charges and deterministic working-set arithmetic, so any
+    trajectory drift is a behavior change, not measurement noise.
+    """
+    problems: list[str] = []
+    for key in (
+        "nodes_trajectory",
+        "max_degradation",
+        "mean_saving",
+        "degradation_target",
+    ):
+        if key not in baseline:
+            problems.append(f"autoscale baseline missing {key!r}")
+        if key not in current:
+            problems.append(f"autoscale current run missing {key!r}")
+    if problems:
+        return problems
+    if current["nodes_trajectory"] != baseline["nodes_trajectory"]:
+        problems.append(
+            f"autoscale: nodes_trajectory {current['nodes_trajectory']} != "
+            f"baseline {baseline['nodes_trajectory']}"
+        )
+    target = baseline["degradation_target"]
+    if current["max_degradation"] > target + 1e-9:
+        problems.append(
+            f"autoscale: max_degradation {current['max_degradation']:.3f} "
+            f"> committed target {target}"
+        )
+    floor = baseline["mean_saving"] * (1.0 - tolerance)
+    if current["mean_saving"] < floor:
+        problems.append(
+            f"autoscale: mean_saving {current['mean_saving']:.3f} < floor "
+            f"{floor:.3f} (baseline {baseline['mean_saving']:.3f})"
+        )
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
         "--baseline",
         default=DEFAULT_BASELINE,
-        help=f"committed baseline JSON (default {DEFAULT_BASELINE})",
+        help=f"committed workload baseline JSON (default {DEFAULT_BASELINE})",
     )
     parser.add_argument(
-        "--current", required=True, help="fresh --bench-json output to check"
+        "--current", default=None, help="fresh --bench-json output to check"
+    )
+    parser.add_argument(
+        "--pr5-baseline",
+        default=DEFAULT_PR5_BASELINE,
+        help=f"committed autoscale baseline (default {DEFAULT_PR5_BASELINE})",
+    )
+    parser.add_argument(
+        "--pr5-current",
+        default=None,
+        help="fresh fig_autoscale --bench-json output to check",
     )
     parser.add_argument(
         "--tolerance",
         type=float,
         default=DEFAULT_TOLERANCE,
-        help="allowed relative speedup drop (default 0.10)",
+        help="allowed relative metric drop (default 0.10)",
     )
     args = parser.parse_args(argv)
+    if args.current is None and args.pr5_current is None:
+        parser.error("pass --current and/or --pr5-current")
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.current) as f:
-        current = json.load(f)
+    problems: list[str] = []
+    n_checked = 0
 
-    problems = compare(baseline, current, args.tolerance)
-    base_wl = baseline.get("workloads", {})
-    cur_wl = current.get("workloads", {})
-    for name in sorted(set(base_wl) & set(cur_wl)):
-        base = base_wl[name].get(METRIC, float("nan"))
-        cur = cur_wl[name].get(METRIC, float("nan"))
-        print(f"check_regression/{name},{cur:.3f},baseline={base:.3f}")
+    if args.current is not None:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.current) as f:
+            current = json.load(f)
+        problems += compare(baseline, current, args.tolerance)
+        base_wl = baseline.get("workloads", {})
+        cur_wl = current.get("workloads", {})
+        n_checked += len(cur_wl)
+        for name in sorted(set(base_wl) & set(cur_wl)):
+            base = base_wl[name].get(METRIC, float("nan"))
+            cur = cur_wl[name].get(METRIC, float("nan"))
+            print(f"check_regression/{name},{cur:.3f},baseline={base:.3f}")
+
+    if args.pr5_current is not None:
+        with open(args.pr5_baseline) as f:
+            pr5_baseline = json.load(f)
+        with open(args.pr5_current) as f:
+            pr5_current = json.load(f)
+        problems += compare_autoscale(pr5_baseline, pr5_current, args.tolerance)
+        n_checked += 1
+        print(
+            f"check_regression/autoscale,"
+            f"{pr5_current.get('max_degradation', float('nan')):.3f},"
+            f"nodes={pr5_current.get('nodes_trajectory')}"
+        )
+
     if problems:
         for p in problems:
             print(f"REGRESSION: {p}", file=sys.stderr)
         return 1
-    print(f"check_regression/ok,{len(cur_wl)},tolerance={args.tolerance:.0%}")
+    print(f"check_regression/ok,{n_checked},tolerance={args.tolerance:.0%}")
     return 0
 
 

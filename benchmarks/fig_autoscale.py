@@ -1,0 +1,172 @@
+"""Online KV-working-set autoscaler under a drifting request mix.
+
+Drives a serving engine through short-prompt → long-context → short-prompt
+waves with autoscaling enabled and shows the closed loop promised by the
+ROADMAP follow-on: the rolling profile feeds ``advise_local_size`` every
+``readvise_every`` waves, the advised budget is translated into pool
+capacity (``add_nodes`` / ``drain_node`` with background extent migration),
+and the plan diff moves only drifted objects.
+
+Asserted at every re-advise point (the PR's acceptance bar):
+
+  * re-simulated degradation ≤ the 16% target (the paper's knee);
+  * installed pool capacity covers the advised remote KV bytes;
+  * served tokens stay bit-identical to an untiered/unpooled engine;
+
+and across the run: the pool *grows* during the long-context phase and
+*shrinks back* once the burst ages out of the decayed working set.
+
+``--smoke`` runs a shortened mix (CI's serving-smoke job);
+``--bench-json PATH`` writes the autoscale perf contract consumed by
+``benchmarks/check_regression.py`` (committed as ``BENCH_pr5.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import get_model
+from repro.serving import AutoscaleConfig, EngineConfig, ServingEngine
+
+from benchmarks.common import emit, save_json
+
+KIB = 1 << 10
+DEGRADATION_TARGET = 0.16
+SHORT_P, LONG_P = 3, 44
+MAX_NEW = 4
+
+
+def _phases(smoke: bool) -> list[tuple[str, int, int]]:
+    """(phase, prompt_len, n_waves) — the drifting request mix."""
+    if smoke:
+        return [("short", SHORT_P, 2), ("long", LONG_P, 2),
+                ("short", SHORT_P, 4)]
+    return [("short", SHORT_P, 4), ("long", LONG_P, 6),
+            ("short", SHORT_P, 8)]
+
+
+def run(*, smoke: bool = False, bench_json: str | None = None) -> dict:
+    cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    total = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+
+    acfg = AutoscaleConfig(
+        readvise_every=2,
+        degradation_target=DEGRADATION_TARGET,
+        window=6,
+        decay=0.5,
+        # sized so the max_nodes clamp never binds for this mix: the long
+        # phase peaks at ~6 nodes of advised remote KV working set
+        node_capacity_bytes=16 * KIB,
+        min_nodes=1,
+        max_nodes=8,
+        compute_us_per_token=200.0,
+    )
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64,
+        hbm_budget_bytes=int(total * 0.2),
+        pool_nodes=1, pool_stripe_bytes=64 * KIB,
+        autoscale=acfg,
+    ))
+    ref = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+
+    points: list[dict] = []
+    wave = 0
+    for phase, plen, n_waves in _phases(smoke):
+        for _ in range(n_waves):
+            wave += 1
+            prompts = (np.arange(2 * plen, dtype=np.int32).reshape(2, plen)
+                       % cfg.vocab_size)
+            out = eng.generate(prompts, max_new=MAX_NEW)
+            expect = ref.generate(prompts, max_new=MAX_NEW)
+            assert np.array_equal(out, expect), (
+                f"wave {wave}: autoscaled tokens diverged from untiered"
+            )
+            eng.reset()
+            ref.reset()
+            if eng.autoscale_log and eng.autoscale_log[-1]["wave"] == wave:
+                entry = dict(eng.autoscale_log[-1])
+                entry["phase"] = phase
+                points.append(entry)
+
+    assert points, "autoscaler never re-advised"
+    for p in points:
+        deg = p["resimulated_degradation"]
+        assert p["feasible"], (
+            f"wave {p['wave']}: advisor found no feasible budget"
+        )
+        assert deg <= DEGRADATION_TARGET + 1e-9, (
+            f"wave {p['wave']}: re-simulated degradation {deg:.3f} "
+            f"> {DEGRADATION_TARGET}"
+        )
+        # installed capacity covers the advised remote working set
+        capacity = p["n_alive"] * acfg.node_capacity_bytes
+        assert capacity >= p["remote_kv_bytes"], (
+            f"wave {p['wave']}: capacity {capacity} < advised working set "
+            f"{p['remote_kv_bytes']}"
+        )
+        emit(f"fig_autoscale/wave{p['wave']:02d}_{p['phase']}",
+             p["advised_budget_bytes"],
+             f"nodes={p['n_alive']} f={p['advised_fraction']:.3f} "
+             f"deg={deg:.3f} saving={p['memory_saving']:.2f}")
+
+    nodes = [p["n_alive"] for p in points]
+    long_peak = max(p["n_alive"] for p in points if p["phase"] == "long")
+    first_short = points[0]["n_alive"]
+    assert long_peak > first_short, (
+        f"pool never grew on long-context waves: {nodes}"
+    )
+    assert nodes[-1] < long_peak, (
+        f"pool never shrank after the burst aged out: {nodes}"
+    )
+    migrated = sum((p["migration"] or {}).get("moved_extents", 0)
+                   for p in points)
+    max_deg = max(p["resimulated_degradation"] for p in points)
+    mean_saving = sum(p["memory_saving"] for p in points) / len(points)
+    emit("fig_autoscale/headline", 0.0,
+         f"nodes={nodes} max_deg={max_deg:.3f} "
+         f"mean_saving={mean_saving:.2f} migrated_extents={migrated}")
+
+    payload = {
+        "autoscale": {
+            "degradation_target": DEGRADATION_TARGET,
+            "max_degradation": max_deg,
+            "mean_saving": mean_saving,
+            "nodes_trajectory": nodes,
+            "peak_nodes": long_peak,
+            "final_nodes": nodes[-1],
+            "migrated_extents": migrated,
+            "n_readvise": len(points),
+            "smoke": smoke,
+        },
+        "points": points,
+    }
+    save_json("fig_autoscale", payload)
+    if bench_json:
+        with open(bench_json, "w") as f:
+            json.dump(payload["autoscale"], f, indent=1, sort_keys=True)
+            f.write("\n")
+        emit("fig_autoscale/bench_json", 0.0, bench_json)
+    return payload
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="shortened drifting mix (CI serving-smoke)")
+    parser.add_argument("--bench-json", nargs="?", const="BENCH_pr5.json",
+                        default=None, metavar="PATH",
+                        help="write the autoscale perf contract to PATH "
+                             "(default: BENCH_pr5.json)")
+    args = parser.parse_args()
+    run(smoke=args.smoke, bench_json=args.bench_json)
+
+
+if __name__ == "__main__":
+    main()

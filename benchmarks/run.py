@@ -13,6 +13,7 @@ and writes structured JSON under benchmarks/results/.
   fig_tiered_scan — layer-scan ablation: remat x prefetch x local_fraction
   fig_pipeline — trace-driven prefetch: window x fraction x nodes sweep
   fig_sizing — cost-model-vs-simulator curves + advised local size/workload
+  fig_autoscale — online KV autoscaler under a drifting request mix
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
 
 ``--bench-json [PATH]`` runs a fast per-workload baseline (oracle vs legacy
@@ -97,6 +98,7 @@ def main() -> None:
         fig8_threads,
         fig9_dualbuffer,
         fig10_problem_sizes,
+        fig_autoscale,
         fig_pipeline,
         fig_pool_scaling,
         fig_sizing,
@@ -115,6 +117,7 @@ def main() -> None:
         ("fig_tiered_scan", fig_tiered_scan),
         ("fig_pipeline", fig_pipeline),
         ("fig_sizing", fig_sizing),
+        ("fig_autoscale", fig_autoscale),
     ]
     failures = 0
     for name, mod in modules:

@@ -2,7 +2,9 @@
 
 The engine catalogs params + KV cache as data objects and runs the placement
 policy against an HBM budget; batched greedy decoding then runs through the
-compiled decode step.
+compiled decode step. With ``autoscale=`` the engine also profiles each
+request wave, re-runs the quantitative sizing advisor, and grows/shrinks
+the remote memory pool as the KV working set drifts (DESIGN.md §8).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,7 +16,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.models import get_model
-from repro.serving import EngineConfig, ServingEngine
+from repro.serving import AutoscaleConfig, EngineConfig, ServingEngine
 
 
 def main() -> None:
@@ -42,6 +44,24 @@ def main() -> None:
     tight = ServingEngine(cfg, params, EngineConfig(
         max_batch=4, max_len=128, hbm_budget_bytes=1 << 20))
     print("tight-budget placement:", tight.stats()["placement"])
+
+    # autoscaled variant: a drifting request mix (short prompts, then long
+    # context, then short again) grows and shrinks the remote pool online
+    auto = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, max_len=128, hbm_budget_bytes=1 << 20,
+        pool_nodes=1, pool_stripe_bytes=64 * 1024,
+        autoscale=AutoscaleConfig(readvise_every=2,
+                                  node_capacity_bytes=64 * 1024,
+                                  max_nodes=8),
+    ))
+    for plen in (4, 4, 96, 96, 4, 4):
+        wave = rng.integers(0, cfg.vocab_size, (4, plen)).astype(np.int32)
+        auto.generate(wave, max_new=8)
+        auto.reset()
+    for entry in auto.autoscale_log:
+        print(f"  wave {entry['wave']:2d}: nodes={entry['n_alive']} "
+              f"advised_f={entry['advised_fraction']:.3f} "
+              f"deg={entry['resimulated_degradation']:.3f}")
 
 
 if __name__ == "__main__":

@@ -10,13 +10,20 @@ from repro.core.fabric import (
 )
 from repro.core.metadata import MetadataTable, ObjectMeta, Status, Tier
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind, SMALL_OBJECT_BYTES
-from repro.core.placement import PlacementPlan, PlacementPolicy, demotion_order
+from repro.core.placement import (
+    PlacementPlan,
+    PlacementPolicy,
+    PlanDiff,
+    demotion_order,
+    diff_plans,
+)
 from repro.core.pool import ExtentLostError, MemoryPool
 from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
 from repro.core.sizing import (
     CostModel,
     ModelConfig,
+    RollingProfile,
     SizingAdvice,
     WorkloadProfile,
     advise_local_size,
@@ -52,7 +59,9 @@ __all__ = [
     "ObjectMeta",
     "PlacementPlan",
     "PlacementPolicy",
+    "PlanDiff",
     "RemoteStore",
+    "RollingProfile",
     "SMALL_OBJECT_BYTES",
     "SimClock",
     "Status",
@@ -67,6 +76,7 @@ __all__ = [
     "advise_local_size",
     "blocked_remat_scan",
     "demotion_order",
+    "diff_plans",
     "synthetic_profile",
     "grad_safe_barrier",
     "leaf_sharding",

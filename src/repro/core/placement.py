@@ -77,6 +77,55 @@ class PlacementPlan:
         }
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanDiff:
+    """Object moves that turn one :class:`PlacementPlan` into another.
+
+    The serving autoscaler re-plans every re-advise; applying the *diff*
+    (promote the few objects whose tier improved, demote the few that got
+    worse, leave the rest untouched) instead of a full re-offload keeps
+    resize traffic proportional to the working-set drift, not the catalog.
+    """
+
+    promote: tuple[str, ...]    # REMOTE -> LOCAL: free the pool copy
+    demote: tuple[str, ...]     # LOCAL -> REMOTE: allocate + write back
+    rehome: tuple[str, ...]     # REMOTE in both, planned home node changed
+    unchanged_remote: tuple[str, ...]
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.promote or self.demote or self.rehome)
+
+    def summary(self) -> dict:
+        return {
+            "n_promote": len(self.promote),
+            "n_demote": len(self.demote),
+            "n_rehome": len(self.rehome),
+            "n_unchanged_remote": len(self.unchanged_remote),
+        }
+
+
+def diff_plans(old: PlacementPlan, new: PlacementPlan) -> PlanDiff:
+    """Diff two plans into promote/demote/rehome move lists (sorted).
+
+    Objects present in only one plan's catalog are handled by their remote
+    membership alone: gone-and-was-remote means promote (free the copy),
+    new-and-is-remote means demote. Home-node churn for objects that stay
+    remote is reported separately — striped pools rebalance extents
+    themselves, so a ``rehome`` is advisory, not a data move.
+    """
+    old_remote = set(old.remote_names())
+    new_remote = set(new.remote_names())
+    stay = old_remote & new_remote
+    rehome = {n for n in stay if old.node_of.get(n) != new.node_of.get(n)}
+    return PlanDiff(
+        promote=tuple(sorted(old_remote - new_remote)),
+        demote=tuple(sorted(new_remote - old_remote)),
+        rehome=tuple(sorted(rehome)),
+        unchanged_remote=tuple(sorted(stay - rehome)),
+    )
+
+
 def demotion_order(objects: Iterable[DataObject]) -> list[DataObject]:
     """Paper §4.1 ranking: size desc, then accesses asc, then write-ratio desc."""
     eligible = [

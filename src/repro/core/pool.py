@@ -26,7 +26,14 @@ Mechanisms:
     sim-time and drops its data; reads transparently fail over to surviving
     replicas; :meth:`recover` re-replicates degraded extents from survivors
     (charging read+write fabric time) or restores singly-homed extents from
-    a checkpoint blob set (the ``checkpoint.manager`` metadata path).
+    a checkpoint blob set (the ``checkpoint.manager`` metadata path);
+  * **elastic capacity** — :meth:`add_nodes` grows the pool and
+    :meth:`drain_node` shrinks it; both drive :meth:`rebalance`, a
+    make-before-break extent migration onto the canonical striped layout
+    over the new membership (new replicas are allocated and committed
+    before old ones are freed, so every object stays bit-identically
+    readable throughout, and migration runs on its own timeline so
+    in-flight reads on the main timeline never block on it).
 
 Every transfer both moves real bytes (numpy) and charges the fabric model,
 so pool-backed workloads stay bit-exact against untiered oracles while the
@@ -58,6 +65,17 @@ class ExtentLostError(RuntimeError):
 def _home_of(name: str, n_nodes: int) -> int:
     """Deterministic home node for an object (stable across runs/processes)."""
     return zlib.crc32(name.encode()) % n_nodes
+
+
+def _striped_replicas(home: int, index: int, alive_ids: list[int],
+                      k: int) -> list[int]:
+    """The canonical replica walk: extent ``index`` of an object homed at
+    ``home`` starts at ``(home + index) % N`` over the alive membership and
+    takes the next ``k`` nodes. Shared by :meth:`MemoryPool.alloc` and
+    :meth:`MemoryPool.rebalance` so a rebalanced object is laid out exactly
+    as if freshly allocated."""
+    start = (home + index) % len(alive_ids)
+    return [alive_ids[(start + r) % len(alive_ids)] for r in range(k)]
 
 
 @dataclasses.dataclass
@@ -110,6 +128,8 @@ class MemoryPool:
         self.fabric = fabric
         self.stripe_bytes = stripe_bytes
         self.replication = min(replication, n_nodes)
+        self.qps_per_node = qps_per_node
+        self.node_capacity_bytes = node_capacity_bytes
         self.nodes = [
             RemoteStore(
                 clock=self.clock,
@@ -122,6 +142,7 @@ class MemoryPool:
         ]
         self._directory: dict[str, PoolObject] = {}
         self._failures: list[dict] = []
+        self._resizes: list[dict] = []
 
     # -- topology ----------------------------------------------------------
     @property
@@ -163,12 +184,9 @@ class MemoryPool:
                 range(0, max(flat.nbytes, 1), self.stripe_bytes)
             ):
                 chunk = flat[off : off + self.stripe_bytes]
-                # walk alive nodes starting at the striped primary
-                start = (h + idx) % len(alive)
-                replicas = [alive[(start + r) % len(alive)] for r in range(k)]
                 ext = Extent(index=idx, offset=off, nbytes=chunk.nbytes,
-                             replicas=replicas)
-                for node_id in replicas:
+                             replicas=_striped_replicas(h, idx, alive, k))
+                for node_id in ext.replicas:
                     self.nodes[node_id].alloc(ext.key(name), chunk)
                     placed.append((node_id, ext.key(name)))
                 extents.append(ext)
@@ -199,6 +217,10 @@ class MemoryPool:
 
     def __contains__(self, name: str) -> bool:
         return name in self._directory
+
+    def names(self) -> list[str]:
+        """Logical objects currently in the pool (directory order)."""
+        return list(self._directory)
 
     def nbytes(self, name: str) -> int:
         return self._directory[name].nbytes
@@ -702,6 +724,215 @@ class MemoryPool:
             "alive_nodes": len(alive_ids),
         }
 
+    # -- elastic capacity: add/drain nodes with background migration ---------
+    def rebalance(
+        self, *, timeline: str = "migration", exclude: Iterable[int] = ()
+    ) -> dict:
+        """Migrate every extent onto the canonical layout over the current
+        alive membership (minus ``exclude``), make-before-break.
+
+        For each extent: new replicas are copied from a least-loaded live
+        source (read charged on the source QP, write on the target QP) and
+        committed *before* any old copy is freed, so reads stay bit-identical
+        at every intermediate state. A target at physical capacity falls back
+        to retaining an old replica instead (the extent is then reported in
+        ``retained_extents``). Runs on its own ``timeline`` so the main
+        timeline's in-flight reads are never blocked by migration.
+        """
+        excluded = set(exclude)
+        alive_ids = [n.node_id for n in self.alive_nodes()
+                     if n.node_id not in excluded]
+        if not alive_ids:
+            raise NodeFailure("rebalance: no alive memory nodes to target")
+        k = min(self.replication, len(alive_ids))
+        t0 = self.clock.now(timeline)
+        moved = moved_bytes = retained = 0
+        end = t0
+        for name, po in self._directory.items():
+            for ext in po.extents:
+                key = ext.key(name)
+                cur = self._live_replicas(name, ext)
+                if not cur:
+                    raise ExtentLostError(
+                        f"extent {key} lost: no live replica "
+                        f"(had {ext.replicas}); run MemoryPool.recover() "
+                        f"before resizing"
+                    )
+                targets = _striped_replicas(po.home, ext.index, alive_ids, k)
+                if set(targets) == set(cur):
+                    ext.replicas = targets
+                    continue
+                data: np.ndarray | None = None
+                placed: list[int] = []
+                for tid in targets:
+                    if tid in cur:
+                        placed.append(tid)
+                        continue
+                    src = self.nodes[min(
+                        cur,
+                        key=lambda i: (
+                            self.nodes[i].least_loaded_resource().free_at, i
+                        ),
+                    )]
+                    read_end = src.stream_read(
+                        key, chunk_bytes=self.stripe_bytes,
+                        issue_at=self.clock.now(timeline), mode="pipelined",
+                    )
+                    if data is None:
+                        data = src.payload(key)
+                    target = self.nodes[tid]
+                    try:
+                        target.alloc(key, data)
+                    except MemoryError:
+                        continue  # at capacity: an old replica is kept below
+                    qp = target.least_loaded_resource()
+                    _s, w_end = qp.issue("write", ext.nbytes, read_end)
+                    target.commit_payload(key, data, pending_until=w_end)
+                    self.clock.wait_until(timeline, w_end)
+                    end = max(end, w_end)
+                    moved += 1
+                    moved_bytes += ext.nbytes
+                    placed.append(tid)
+                # capacity fallback: keep old replicas until k copies exist —
+                # preferring non-excluded holders, so a drain never pins a
+                # copy on the draining node while freeing a survivor's
+                leftovers = sorted(
+                    (i for i in cur if i not in placed),
+                    key=lambda i: (i in excluded, i),
+                )
+                while len(placed) < k and leftovers:
+                    placed.append(leftovers.pop(0))
+                    retained += 1
+                for nid in cur:
+                    if nid not in placed:
+                        self.nodes[nid].free(key)
+                ext.replicas = placed
+        return {
+            "moved_extents": moved,
+            "moved_bytes": moved_bytes,
+            "retained_extents": retained,
+            "migration_us": max(end - t0, 0.0),
+            "n_alive": len(alive_ids),
+            "replication": k,
+        }
+
+    def _rehome_atomics(self) -> None:
+        """Re-assign every atomic to its current hash target. Atomics route
+        by ``crc32(key) % n_nodes`` probing past dead nodes (see
+        :meth:`_atomic_node`), so any membership change — growth, slot
+        reuse, retirement — can silently move a key's home; after one, the
+        counter must follow or reads would return 0 from the new home."""
+        moved: dict[str, int] = {}
+        for node in self.nodes:
+            if node.alive:
+                moved.update(node.drain_atomics())
+        for key, val in moved.items():
+            self._atomic_node(key).adopt_atomics({key: val})
+
+    def add_nodes(self, k: int, *, timeline: str = "migration") -> dict:
+        """Grow the pool by ``k`` nodes and re-stripe onto them.
+
+        Retired slots are reused first (an oscillating autoscaler must not
+        grow ``self.nodes`` without bound), then fresh nodes are appended;
+        either way the node inherits the pool's fabric, QP count, and
+        per-node capacity. Existing objects are migrated to the canonical
+        striped layout over the enlarged membership (background,
+        replica-preserving — see :meth:`rebalance`), so aggregate read
+        bandwidth scales with the new node count without a realloc or any
+        read unavailability.
+        """
+        if k < 1:
+            raise ValueError("add_nodes: k must be >= 1")
+        free_slots = [i for i, n in enumerate(self.nodes) if n.retired][:k]
+        new_ids = free_slots + list(
+            range(len(self.nodes), len(self.nodes) + k - len(free_slots))
+        )
+        for nid in new_ids:
+            store = RemoteStore(
+                clock=self.clock,
+                fabric=self.fabric,
+                n_resources=self.qps_per_node,
+                node_id=nid,
+                capacity_bytes=self.node_capacity_bytes,
+            )
+            if nid < len(self.nodes):
+                self.nodes[nid] = store
+            else:
+                self.nodes.append(store)
+        self._rehome_atomics()
+        stats = self.rebalance(timeline=timeline)
+        stats["added_nodes"] = k
+        stats["reused_slots"] = len(free_slots)
+        self._resizes.append({"op": "add_nodes", "k": k, **stats})
+        return stats
+
+    def drain_nodes(self, node_ids: Iterable[int], *,
+                    timeline: str = "migration") -> dict:
+        """Evacuate and retire several nodes in *one* migration pass.
+
+        Replica-preserving: every extent with a copy on a draining node is
+        first re-replicated onto the surviving membership (make-before-break
+        via :meth:`rebalance` with the whole set excluded from the target
+        layout — shrinking by N costs one re-stripe, not N), atomics homed
+        there are re-assigned to their post-drain hash targets, and only
+        then are the nodes retired. Raises :class:`MemoryError` — with all
+        data still intact and readable — if the survivors lack capacity,
+        and :class:`NodeFailure` if there is no survivor to evacuate onto.
+        """
+        draining = sorted(set(node_ids))
+        if not draining:
+            raise ValueError("drain_nodes: no node ids given")
+        for nid in draining:
+            if not self.nodes[nid].alive:
+                raise ValueError(f"drain_nodes: node {nid} is not alive")
+        survivors = [n for n in self.alive_nodes()
+                     if n.node_id not in draining]
+        if not survivors:
+            # refusal must lose nothing — neither extents nor atomics (peek
+            # and put back: drain_atomics is the only enumeration surface)
+            held = 0
+            for nid in draining:
+                atomics_held = self.nodes[nid].drain_atomics()
+                self.nodes[nid].adopt_atomics(atomics_held)
+                held += len(atomics_held)
+            if self._directory or held:
+                raise NodeFailure(
+                    "drain_nodes: no surviving node to evacuate onto; "
+                    "add_nodes first"
+                )
+            stats = {"moved_extents": 0, "moved_bytes": 0,
+                     "retained_extents": 0, "migration_us": 0.0,
+                     "n_alive": 0, "replication": 0}
+        else:
+            stats = self.rebalance(timeline=timeline, exclude=set(draining))
+        leftovers = [
+            ext.key(name)
+            for name, po in self._directory.items()
+            for ext in po.extents
+            if set(ext.replicas) & set(draining)
+        ]
+        if leftovers:
+            # capacity fallback kept copies on a draining node: refuse to
+            # retire it (no data loss) — the caller can add_nodes and retry
+            raise MemoryError(
+                f"drain_nodes: surviving nodes lack capacity for "
+                f"{len(leftovers)} extents (e.g. {leftovers[0]!r}); "
+                f"add_nodes first"
+            )
+        evacuated: dict[str, int] = {}
+        for nid in draining:
+            evacuated.update(self.nodes[nid].drain_atomics())
+            self.nodes[nid].retire()
+        for key, val in evacuated.items():
+            self._atomic_node(key).adopt_atomics({key: val})
+        stats["drained_nodes"] = draining
+        self._resizes.append({"op": "drain_nodes", "nodes": draining, **stats})
+        return stats
+
+    def drain_node(self, node_id: int, *, timeline: str = "migration") -> dict:
+        """Evacuate and retire a single node — see :meth:`drain_nodes`."""
+        return self.drain_nodes([node_id], timeline=timeline)
+
     # -- checkpointing hooks -------------------------------------------------
     def snapshot_objects(self) -> dict[str, np.ndarray]:
         """Logical objects, reassembled (shaped) — CheckpointManager input."""
@@ -733,10 +964,12 @@ class MemoryPool:
             "n_objects": len(self._directory),
             "n_nodes": self.n_nodes,
             "n_alive": len(self.alive_nodes()),
+            "n_retired": sum(1 for n in self.nodes if n.retired),
             "replication": self.replication,
             "stripe_bytes": self.stripe_bytes,
             "logical_bytes": self.total_bytes(),
             "physical_bytes": self.physical_bytes(),
             "failures": list(self._failures),
+            "resizes": list(self._resizes),
             "per_node": per_node,
         }

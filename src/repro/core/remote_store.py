@@ -55,6 +55,7 @@ class RemoteStore:
         self.node_id = node_id
         self.capacity_bytes = capacity_bytes
         self.alive = True
+        self.retired = False
         self.failed_at_us: float | None = None
         self.resources = [FabricResource(self.clock, fabric) for _ in range(n_resources)]
         self._objects: dict[str, RemoteObject] = {}
@@ -74,8 +75,40 @@ class RemoteStore:
             self._atomics.clear()
             self._used_bytes = 0
 
+    def retire(self) -> None:
+        """Administratively remove a *drained* node (elastic scale-down).
+
+        Unlike :meth:`fail`, retirement is planned: the caller has already
+        evacuated every extent and atomic, so nothing is lost — but, like a
+        failed node, a retired node serves no further operations.
+        """
+        with self._lock:
+            self.alive = False
+            self.retired = True
+            self._objects.clear()
+            self._atomics.clear()
+            self._used_bytes = 0
+
+    def drain_atomics(self) -> dict[str, int]:
+        """Hand off (and clear) this node's atomic counters for re-homing."""
+        with self._lock:
+            out = dict(self._atomics)
+            self._atomics.clear()
+            return out
+
+    def adopt_atomics(self, values: dict[str, int]) -> None:
+        """Install atomics evacuated from a draining peer (control plane —
+        no fabric charge; the migration path charges data movement)."""
+        self._check_alive()
+        with self._lock:
+            self._atomics.update(values)
+
     def _check_alive(self) -> None:
         if not self.alive:
+            if self.retired:
+                raise NodeFailure(
+                    f"memory node {self.node_id} was drained and retired"
+                )
             raise NodeFailure(
                 f"memory node {self.node_id} failed at t={self.failed_at_us}us"
             )
@@ -382,6 +415,7 @@ class RemoteStore:
             "n_ops": sum(r.n_ops for r in self.resources),
             "n_objects": n_objects,
             "alive": self.alive,
+            "retired": self.retired,
             "per_resource": [
                 {
                     "name": r.name,

@@ -143,6 +143,82 @@ class WorkloadProfile:
         )
 
 
+class RollingProfile:
+    """Incremental :class:`WorkloadProfile` accumulator with windowed decay.
+
+    The serving autoscaler appends one wave of KV fetch/commit traffic per
+    ``generate()`` call and periodically re-runs :func:`advise_local_size`
+    on the exported profile. Two mechanisms keep the advice tracking the
+    *live* working set (Wahlgren et al.: disaggregation decisions must
+    follow the working set, not the peak):
+
+    * **window** — only the last ``window`` waves contribute event steps, so
+      a long-dead access pattern stops shaping the prediction;
+    * **decay** — each object's size estimate is the *decayed max* of its
+      per-wave touched bytes, ``max_w(touched_w · decay^age_w)`` (age 0 =
+      newest). A long-context burst keeps the estimate high for a few waves
+      (hysteresis against thrash), then ages out and the advised budget —
+      and with it the pool capacity — shrinks back.
+    """
+
+    def __init__(self, *, window: int = 8, decay: float = 0.5,
+                 source: str = "rolling") -> None:
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        self.window = window
+        self.decay = decay
+        self.source = source
+        self._waves: list[tuple[_EventList, dict[str, ObjectProfile]]] = []
+        self.n_waves_seen = 0
+
+    def __len__(self) -> int:
+        return len(self._waves)
+
+    def append_wave(self, events: _EventList,
+                    objects: dict[str, ObjectProfile]) -> None:
+        """Append one wave: its ordered event list + touched-bytes census."""
+        for op, _val in events:
+            if op not in ("fetch", "commit", "compute"):
+                raise ValueError(f"unknown profile event {op!r}")
+        self._waves.append((
+            [tuple(e) for e in events],
+            {n: dataclasses.replace(o) for n, o in objects.items()},
+        ))
+        del self._waves[:-self.window]
+        self.n_waves_seen += 1
+
+    def profile(self) -> WorkloadProfile:
+        """Export the windowed profile (decayed-max census + event steps)."""
+        merged: dict[str, ObjectProfile] = {}
+        n = len(self._waves)
+        for idx, (_events, rows) in enumerate(self._waves):  # oldest first
+            weight = self.decay ** (n - 1 - idx)
+            for name, row in rows.items():
+                est = max(int(row.size_bytes * weight), 1)
+                cur = merged.get(name)
+                if cur is None:
+                    merged[name] = dataclasses.replace(
+                        row, size_bytes=est, real_nbytes=est)
+                else:
+                    cur.size_bytes = max(cur.size_bytes, est)
+                    cur.real_nbytes = cur.size_bytes
+                    # access *rates* follow the newest wave; event counters
+                    # accumulate over the window
+                    cur.n_reads = row.n_reads
+                    cur.n_writes = row.n_writes
+                    cur.kind = row.kind
+                    cur.pinned_local = row.pinned_local
+                    cur.n_fetch_events += row.n_fetch_events
+                    cur.n_commit_events += row.n_commit_events
+        return WorkloadProfile(
+            objects=merged,
+            steps=[list(ev) for ev, _rows in self._waves],
+            source=self.source,
+        )
+
+
 def synthetic_profile(
     catalog: ObjectCatalog,
     *,
@@ -659,6 +735,83 @@ def _replay(profile: WorkloadProfile, plan: PlacementPlan,
     return max(t, store.fence_time())
 
 
+def simulate_profile(
+    profile: WorkloadProfile,
+    *,
+    local_budget_bytes: int | None = None,
+    local_fraction: float | None = None,
+    config: ModelConfig | None = None,
+    **config_kwargs: Any,
+) -> float:
+    """Drive the recorded event stream through the *real* simulator.
+
+    Unlike :meth:`CostModel.predict` — an analytic replay — this registers
+    every profiled object with a :class:`DolmaRuntime` (backed by a
+    :class:`MemoryPool` for ``n_nodes > 1``), replays the profile's
+    fetch/compute/commit events for ``n_iters`` steps, and returns the
+    simulated ``elapsed_us``. The serving autoscaler's re-advise points are
+    *re-simulated* through this path, so the ≤16%-degradation gate is
+    checked by machinery independent of the model that chose the budget.
+    """
+    from repro.core.dual_buffer import DolmaRuntime, run_iterative
+    from repro.core.pool import MemoryPool
+
+    cfg = config or ModelConfig(**config_kwargs)
+    store = None
+    if cfg.n_nodes > 1:
+        store = MemoryPool(
+            cfg.n_nodes,
+            fabric=cfg.fabric,
+            stripe_bytes=cfg.stripe_bytes,
+            replication=cfg.replication,
+            qps_per_node=cfg.qps_per_node,
+        )
+    peak = sum(o.size_bytes for o in profile.objects.values()) or 1
+    if local_fraction is None:
+        if local_budget_bytes is None:
+            raise ValueError("pass local_fraction or local_budget_bytes")
+        # +0.5 so finalize's int(peak * fraction) lands back on the budget
+        local_fraction = min((local_budget_bytes + 0.5) / peak, 1.0)
+    rt = DolmaRuntime(
+        local_fraction=local_fraction,
+        fabric=cfg.fabric,
+        store=store,
+        sim_scale=profile.sim_scale,
+        pipeline=cfg.mode == "pipeline",
+        dual_buffer=cfg.mode != "serial",
+        prefetch_window=cfg.window,
+    )
+    payloads: dict[str, np.ndarray] = {}
+    for o in profile.objects.values():
+        # physical arrays at the profile's sim_scale reproduce the modeled
+        # sizes placement ranks by (sim_bytes = real_nbytes * sim_scale)
+        arr = np.zeros(max(o.real_nbytes, 1), dtype=np.uint8)
+        payloads[o.name] = arr
+        rt.alloc(
+            o.name, arr,
+            reads_per_iter=o.n_reads,
+            writes_per_iter=o.n_writes,
+            kind=ObjectKind(o.kind),
+            lifetime_iters=o.lifetime_iters,
+            pinned_local=o.pinned_local,
+        )
+    rt.finalize()
+    steps = profile.steps or [[]]
+
+    def body(runtime: "DolmaRuntime", it: int) -> None:
+        for op, val in steps[min(it, len(steps) - 1)]:
+            if op == "fetch":
+                if val in payloads:
+                    runtime.fetch(val)
+            elif op == "commit":
+                if val in payloads:
+                    runtime.commit(val, payloads[val])
+            else:
+                runtime.charge_compute(us=val)
+
+    return run_iterative(rt, cfg.n_iters, body)
+
+
 # ---------------------------------------------------------------------------
 # the solver: smallest local budget meeting the degradation target
 # ---------------------------------------------------------------------------
@@ -851,8 +1004,10 @@ __all__ = [
     "ModelConfig",
     "ObjectProfile",
     "Prediction",
+    "RollingProfile",
     "SizingAdvice",
     "WorkloadProfile",
     "advise_local_size",
+    "simulate_profile",
     "synthetic_profile",
 ]

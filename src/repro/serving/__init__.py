@@ -1,1 +1,3 @@
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.engine import AutoscaleConfig, EngineConfig, ServingEngine
+
+__all__ = ["AutoscaleConfig", "EngineConfig", "ServingEngine"]

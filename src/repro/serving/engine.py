@@ -1,14 +1,26 @@
-"""Batched serving engine with DOLMA-tiered KV cache.
+"""Batched serving engine with DOLMA-tiered KV cache and online autoscaling.
 
 The engine runs continuous batched greedy decoding over a fixed slot pool.
 DOLMA integration: the KV cache is cataloged as data objects (one per layer);
 the placement policy decides, from the HBM budget, whether cache tiers stay
 device-local or (on backends that support it) overflow to pinned_host —
 mirroring §4.2's local-region/remote-region split for serving workloads.
+
+Online autoscaling (DESIGN.md §8) closes sizing → capacity: every
+``generate()`` wave appends its KV fetch/commit traffic to a rolling
+:class:`~repro.core.sizing.RollingProfile`; every ``readvise_every`` waves
+the quantitative sizing advisor re-runs against the degradation target, the
+advised budget is translated into pool capacity (``add_nodes`` /
+``drain_node`` with background extent migration), and the old→new placement
+plans are *diffed* into promote/demote object moves instead of a full
+re-offload — so a drifting request mix (short-prompt ↔ long-context waves)
+grows and shrinks the remote pool while predicted degradation stays at the
+paper's ≤16% knee.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -17,10 +29,41 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
-from repro.core.placement import PlacementPolicy
+from repro.core.placement import PlacementPolicy, diff_plans
 from repro.core.pool import MemoryPool
+from repro.core.sizing import (
+    CostModel,
+    ModelConfig as SizingModelConfig,
+    ObjectProfile,
+    RollingProfile,
+    advise_local_size,
+    simulate_profile,
+)
 from repro.core.tiering import supports_host_offload
 from repro.models import get_model
+
+
+@dataclasses.dataclass
+class AutoscaleConfig:
+    """Online KV-working-set autoscaler knobs (DESIGN.md §8).
+
+    ``node_capacity_bytes`` is the *planning* capacity of one memory node:
+    the advised remote KV bytes (× replication) divided by it gives the
+    target pool size. ``compute_us_per_token`` is the deterministic modeled
+    decode cost the profile charges per batched token — it sets the
+    compute/fetch ratio the degradation prediction is priced against (wall
+    clock would make the advice machine-dependent and the tests flaky).
+    """
+
+    readvise_every: int = 2        # waves between advisor runs
+    degradation_target: float = 0.16  # the paper's knee (§6.1)
+    window: int = 8                # waves of profile history
+    decay: float = 0.5             # per-wave-age working-set decay
+    node_capacity_bytes: int = 8 << 20
+    min_nodes: int = 1
+    max_nodes: int = 8
+    compute_us_per_token: float = 200.0
+    sizing_iters: int = 4          # horizon the cost model prices
 
 
 @dataclasses.dataclass
@@ -30,10 +73,12 @@ class EngineConfig:
     hbm_budget_bytes: int | None = None   # None = no cache tiering pressure
     greedy: bool = True
     # KV-cache overflow target: a multi-node memory pool. 0 = overflow is
-    # recorded in the plan only (seed behavior).
+    # recorded in the plan only (seed behavior). With autoscaling enabled
+    # this is the *initial* pool size (defaults to autoscale.min_nodes).
     pool_nodes: int = 0
     pool_replication: int = 1
     pool_stripe_bytes: int = 1 << 20
+    autoscale: AutoscaleConfig | None = None
 
 
 class ServingEngine:
@@ -46,6 +91,18 @@ class ServingEngine:
             cfg, engine_cfg.max_batch, engine_cfg.max_len
         )
         self.pool: MemoryPool | None = None
+        acfg = engine_cfg.autoscale
+        self._pool_target_nodes = engine_cfg.pool_nodes or (
+            acfg.min_nodes if acfg is not None else 0
+        )
+        self._rolling = (
+            RollingProfile(window=acfg.window, decay=acfg.decay,
+                           source="serving")
+            if acfg is not None else None
+        )
+        self._wave = 0
+        self.autoscale_log: list[dict] = []
+        self.catalog = self._build_catalog()
         self.placement = self._decide_cache_placement()
         self._offload_overflow(initial=True)
         self._step = jax.jit(
@@ -55,7 +112,7 @@ class ServingEngine:
         )
 
     # -- DOLMA placement over serving objects -------------------------------
-    def _decide_cache_placement(self):
+    def _build_catalog(self) -> ObjectCatalog:
         catalog = ObjectCatalog()
         for path, leaf in jax.tree_util.tree_leaves_with_path(self.params):
             catalog.add(DataObject(
@@ -71,18 +128,31 @@ class ServingEngine:
                 kind=ObjectKind.KV_CACHE,
                 n_reads=1, n_writes=1,
             ))
-        budget = self.ecfg.hbm_budget_bytes or catalog.total_bytes
-        plan = PlacementPolicy().plan(
-            catalog,
+        return catalog
+
+    def _decide_cache_placement(self):
+        budget = self.ecfg.hbm_budget_bytes or self.catalog.total_bytes
+        return PlacementPolicy().plan(
+            self.catalog,
             local_budget_bytes=budget,
-            n_nodes=max(self.ecfg.pool_nodes, 1),
+            n_nodes=max(self._pool_target_nodes, 1),
         )
-        if plan.remote_names() and supports_host_offload():
-            # On offload-capable backends, demoted cache objects would get
-            # memory_kind="pinned_host"; the engine records the plan either
-            # way so the decision is observable/testable.
-            pass
-        return plan
+
+    @property
+    def offload_memory_kind(self) -> str | None:
+        """Memory kind demoted objects would get on this backend: on
+        offload-capable backends the plan's remote tiers map to
+        ``pinned_host`` arrays; elsewhere the demotion is recorded in the
+        plan (and, with ``pool_nodes``, materialized in the memory pool)."""
+        if self.placement.remote_names() and supports_host_offload():
+            return "pinned_host"
+        return None
+
+    def placement_summary(self) -> dict:
+        """Plan summary plus how this backend would realize the demotions."""
+        summary = dict(self.placement.summary())
+        summary["offload_memory_kind"] = self.offload_memory_kind
+        return summary
 
     # -- KV-cache overflow -> memory pool -----------------------------------
     def _cache_leaves(self, names: set[str] | None = None) -> dict[str, np.ndarray]:
@@ -95,6 +165,10 @@ class ServingEngine:
                 out[name] = np.asarray(leaf)
         return out
 
+    def _demoted_cache_names(self) -> list[str]:
+        return [n for n in self.placement.remote_names()
+                if n.startswith("cache")]
+
     def _offload_overflow(self, *, initial: bool = False) -> None:
         """Push demoted KV-cache objects to the multi-node pool.
 
@@ -102,15 +176,14 @@ class ServingEngine:
         placement plan); later calls write back the current values
         asynchronously — the serving analogue of DOLMA's async demotion.
         """
-        if not self.ecfg.pool_nodes:
+        if not self._pool_target_nodes:
             return
-        demoted = [n for n in self.placement.remote_names()
-                   if n.startswith("cache")]
+        demoted = self._demoted_cache_names()
         if not demoted:
             return
         if self.pool is None:
             self.pool = MemoryPool(
-                self.ecfg.pool_nodes,
+                self._pool_target_nodes,
                 replication=self.ecfg.pool_replication,
                 stripe_bytes=self.ecfg.pool_stripe_bytes,
             )
@@ -125,10 +198,160 @@ class ServingEngine:
             self.pool.fence(demoted)
 
     def reset(self) -> None:
-        """Clear the KV cache (fresh request wave)."""
+        """Clear the KV cache (fresh request wave).
+
+        Pool copies of demoted cache tiers are freed too: a stale overflow
+        entry would otherwise survive the wave boundary and alias the next
+        wave's (re-allocated) cache object.
+        """
+        if self.pool is not None:
+            for name in self.pool.names():
+                if name.startswith("cache"):
+                    self.pool.free(name)
         self.cache = self.model.init_decode_cache(
             self.cfg, self.ecfg.max_batch, self.ecfg.max_len
         )
+
+    # -- the online autoscaler (DESIGN.md §8) -------------------------------
+    def _record_wave(self, batch: int, seq_len: int) -> None:
+        """Append one wave's KV traffic to the rolling profile.
+
+        Each cache tier's *touched* bytes scale with the wave's live
+        batch/sequence occupancy (the KV working set); params are read in
+        full every step. Events mirror the runtime convention: interleaved
+        ``fetch``/``compute`` slices, then ``commit`` for written tiers.
+        """
+        acfg = self.ecfg.autoscale
+        assert acfg is not None and self._rolling is not None
+        frac = min(seq_len / self.ecfg.max_len, 1.0) * (
+            batch / self.ecfg.max_batch
+        )
+        compute_us = batch * seq_len * acfg.compute_us_per_token
+        slice_us = compute_us / max(len(self.catalog), 1)
+        rows: dict[str, ObjectProfile] = {}
+        events: list[tuple[str, Any]] = []
+        committed: list[str] = []
+        for obj in self.catalog:
+            is_cache = obj.kind is ObjectKind.KV_CACHE
+            touched = (max(int(obj.size_bytes * frac), 1) if is_cache
+                       else obj.size_bytes)
+            rows[obj.name] = ObjectProfile(
+                name=obj.name,
+                size_bytes=touched,
+                real_nbytes=touched,
+                kind=obj.kind.value,
+                n_reads=1,
+                n_writes=1 if is_cache else 0,
+                lifetime_iters=math.inf,
+                n_fetch_events=1,
+                n_commit_events=1 if is_cache else 0,
+            )
+            events.append(("fetch", obj.name))
+            events.append(("compute", slice_us))
+            if is_cache:
+                committed.append(obj.name)
+        for name in committed:
+            events.append(("commit", name))
+        self._rolling.append_wave(events, rows)
+        self._wave += 1
+
+    def _resize_pool(self, target: int) -> dict | None:
+        """Grow/shrink the pool toward ``target`` alive nodes in one
+        migration pass; returns its stats (extents moved, bytes, sim-time)."""
+        if self.pool is None:
+            return None
+        alive = sorted(n.node_id for n in self.pool.alive_nodes())
+        if target > len(alive):
+            return self.pool.add_nodes(target - len(alive))
+        if target < len(alive):
+            return self.pool.drain_nodes(alive[target:])
+        return None
+
+    def _readvise(self) -> dict:
+        """Re-run the sizing advisor on the rolling profile and act on it:
+        resize the pool to the advised capacity and apply the plan diff."""
+        acfg = self.ecfg.autoscale
+        assert acfg is not None and self._rolling is not None
+        profile = self._rolling.profile()
+        n_now = (len(self.pool.alive_nodes()) if self.pool is not None
+                 else max(self._pool_target_nodes, 1))
+        mcfg = SizingModelConfig(
+            n_nodes=max(n_now, 1),
+            n_iters=acfg.sizing_iters,
+            stripe_bytes=self.ecfg.pool_stripe_bytes,
+            replication=self.ecfg.pool_replication,
+        )
+        advice = advise_local_size(profile, acfg.degradation_target,
+                                   config=mcfg)
+        catalog = profile.catalog()
+
+        # advised budget -> pool capacity: remote KV bytes over node size
+        # (the demoted set depends only on the budget, not the node count)
+        prelim = PlacementPolicy().plan(
+            catalog, local_budget_bytes=advice.advised_budget_bytes,
+            n_nodes=max(n_now, 1),
+        )
+        remote_kv = sum(catalog[n].size_bytes for n in prelim.remote_names()
+                        if n.startswith("cache"))
+        if remote_kv:
+            need = -(-remote_kv * self.ecfg.pool_replication
+                     // acfg.node_capacity_bytes)
+            target = min(max(need, acfg.min_nodes), acfg.max_nodes)
+        else:
+            target = acfg.min_nodes
+
+        # diff first and free promoted objects *before* resizing, so the
+        # migration never copies extents of entries about to be dropped
+        new_plan = PlacementPolicy().plan(
+            catalog, local_budget_bytes=advice.advised_budget_bytes,
+            n_nodes=target,
+        )
+        diff = diff_plans(self.placement, new_plan)
+        for name in diff.promote:
+            if self.pool is not None and name in self.pool:
+                self.pool.free(name)
+        migration = self._resize_pool(target)
+        self._pool_target_nodes = target
+        self.placement = new_plan
+        self._offload_overflow()  # newly demoted tiers alloc + write back
+
+        # re-simulate the installed operating point against the oracle —
+        # through the real simulator (DolmaRuntime + MemoryPool), not the
+        # cost model that chose the budget
+        sim_cfg = dataclasses.replace(mcfg, n_nodes=max(target, 1))
+        sim_oracle = simulate_profile(profile, local_fraction=1.0,
+                                      config=sim_cfg)
+        sim_installed = simulate_profile(
+            profile, local_budget_bytes=advice.advised_budget_bytes,
+            config=sim_cfg,
+        )
+        resim = sim_installed / sim_oracle - 1.0 if sim_oracle else 0.0
+        installed_pred = CostModel(profile).predict(
+            local_budget_bytes=advice.advised_budget_bytes, config=sim_cfg,
+        ).elapsed_us
+        entry = {
+            "wave": self._wave,
+            "advised_budget_bytes": advice.advised_budget_bytes,
+            "advised_fraction": advice.advised_fraction,
+            "feasible": advice.feasible,
+            "memory_saving": advice.memory_saving,
+            "predicted_degradation": advice.degradation,
+            "resimulated_degradation": resim,
+            # model-vs-simulator agreement at the installed point (§7's
+            # MODEL_TOLERANCE contract, observable per re-advise)
+            "model_rel_error": (abs(installed_pred - sim_installed)
+                                / sim_installed if sim_installed else 0.0),
+            "target_nodes": target,
+            "remote_kv_bytes": remote_kv,  # planned working-set bytes
+            "n_alive": (len(self.pool.alive_nodes())
+                        if self.pool is not None else 0),
+            "pool_logical_bytes": (self.pool.total_bytes()
+                                   if self.pool is not None else 0),
+            "diff": diff.summary(),
+            "migration": migration,
+        }
+        self.autoscale_log.append(entry)
+        return entry
 
     # -- decoding ----------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int = 16) -> np.ndarray:
@@ -156,7 +379,19 @@ class ServingEngine:
                 logits[:, :, : self.cfg.vocab_size], axis=-1
             ).astype(jnp.int32)
         self.cache = cache
-        self._offload_overflow()  # demoted cache tiers -> pool, async
+        acfg = self.ecfg.autoscale
+        if acfg is not None:
+            try:
+                seq_len = int(np.asarray(self.cache["pos"]))
+            except (KeyError, TypeError):
+                seq_len = P + max_new
+            self._record_wave(B, min(seq_len, self.ecfg.max_len))
+        if acfg is not None and self._wave % acfg.readvise_every == 0:
+            # _readvise installs the new plan and runs the write-back itself
+            # — offloading here too would push every demoted tier twice
+            self._readvise()
+        else:
+            self._offload_overflow()  # demoted cache tiers -> pool, async
         return np.concatenate(out, axis=1)[:B]
 
     def stats(self) -> dict:
@@ -164,6 +399,11 @@ class ServingEngine:
             "cache_bytes": sum(
                 x.size * x.dtype.itemsize for x in jax.tree.leaves(self.cache)
             ),
-            "placement": self.placement.summary(),
+            "placement": self.placement_summary(),
             "pool": self.pool.stats() if self.pool is not None else None,
+            "autoscale": {
+                "n_waves": self._wave,
+                "n_readvise": len(self.autoscale_log),
+                "log": list(self.autoscale_log),
+            } if self.ecfg.autoscale is not None else None,
         }

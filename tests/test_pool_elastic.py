@@ -1,0 +1,296 @@
+"""Elastic pool: add_nodes / drain_node migration invariants.
+
+The autoscaler's contract with the pool (DESIGN.md §8):
+
+  * **bit-identical reads** — at every point of a resize sequence, reading
+    any object returns exactly the bytes last written (make-before-break
+    migration never loses or corrupts an extent);
+  * **balance** — after ``add_nodes``, every object's extents are spread
+    over the alive nodes within one stripe per replica rank (the canonical
+    round-robin layout a fresh ``alloc`` would produce);
+  * **no main-timeline stalls** — migration charges its own timeline, so
+    in-flight reads on the main timeline never block on a resize;
+  * **refusal over loss** — a drain that cannot complete (no survivor, or
+    survivors at capacity) raises with all data still intact.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MemoryPool, NodeFailure
+from tests._hypothesis_compat import given, settings, st
+
+KIB = 1 << 10
+
+
+def _blob(nbytes, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 255, size=max(nbytes, 1), dtype=np.uint8
+    )
+
+
+def _extent_counts(pool, name):
+    counts: dict[int, int] = {}
+    for ext in pool._directory[name].extents:
+        for nid in ext.replicas:
+            counts[nid] = counts.get(nid, 0) + 1
+    return counts
+
+
+def _assert_balanced(pool):
+    """Per-object: extent counts across alive nodes within one stripe of
+    balanced per replica rank (what canonical round-robin striping gives)."""
+    alive = [n.node_id for n in pool.alive_nodes()]
+    for name in pool.names():
+        counts = _extent_counts(pool, name)
+        vals = [counts.get(i, 0) for i in alive]
+        assert max(vals) - min(vals) <= pool.replication, (name, counts)
+
+
+def _assert_all_readable(pool, expected):
+    for name, blob in expected.items():
+        got, _end = pool.read_object(name)
+        np.testing.assert_array_equal(got, blob)
+
+
+class TestAddNodes:
+    def test_reads_bit_identical_and_balanced(self):
+        pool = MemoryPool(2, stripe_bytes=16 * KIB)
+        expected = {}
+        for i in range(4):
+            expected[f"o{i}"] = _blob((i + 1) * 50 * KIB, seed=i)
+            pool.alloc(f"o{i}", expected[f"o{i}"])
+        stats = pool.add_nodes(2)
+        assert stats["n_alive"] == 4
+        assert stats["moved_extents"] > 0
+        _assert_all_readable(pool, expected)
+        _assert_balanced(pool)
+
+    def test_new_nodes_actually_serve_reads(self):
+        pool = MemoryPool(1, stripe_bytes=16 * KIB)
+        pool.alloc("x", _blob(256 * KIB))
+        pool.add_nodes(3)
+        pool.read("x")
+        serving = [n.node_id for n in pool.nodes
+                   if any(r.bytes_read for r in n.resources)]
+        assert len(serving) == 4  # striped read touches every node
+
+    def test_bandwidth_scales_after_growth(self):
+        raw = _blob(4 << 20)
+        single = MemoryPool(1, stripe_bytes=256 * KIB)
+        single.alloc("x", raw)
+        _d, end1 = single.read("x", issue_at_us=0.0, sync=False)
+        grown = MemoryPool(1, stripe_bytes=256 * KIB)
+        grown.alloc("x", raw)
+        grown.add_nodes(3)
+        # issue once migration's QP occupancy drains (steady state)
+        t0 = max(r.free_at for r in grown.resources)
+        _d, end4 = grown.read("x", issue_at_us=t0, sync=False)
+        assert end4 - t0 < end1 / 2  # 4 nodes read >2x faster than 1
+
+    def test_migration_charges_own_timeline_not_main(self):
+        pool = MemoryPool(1, stripe_bytes=16 * KIB)
+        pool.alloc("x", _blob(128 * KIB))
+        main_before = pool.clock.now("main")
+        stats = pool.add_nodes(1)
+        assert stats["migration_us"] > 0.0  # fabric time really charged
+        assert pool.clock.now("main") == main_before  # reads never stalled
+
+    def test_replication_preserved(self):
+        pool = MemoryPool(2, stripe_bytes=16 * KIB, replication=2)
+        pool.alloc("x", _blob(100 * KIB, seed=7))
+        pool.add_nodes(2)
+        for ext in pool._directory["x"].extents:
+            assert len(set(ext.replicas)) == 2
+
+    def test_invalid_count_rejected(self):
+        with pytest.raises(ValueError):
+            MemoryPool(2).add_nodes(0)
+
+    def test_atomics_rehomed_on_growth(self):
+        """Growth changes the atomic hash space (crc32 % n_nodes): counters
+        must follow their new homes, not read back as 0 from a fresh node."""
+        pool = MemoryPool(2)
+        for i in range(12):
+            pool.atomic_fetch_add(f"ctr{i}", i + 1)
+        pool.add_nodes(3)
+        for i in range(12):
+            assert pool.atomic_read(f"ctr{i}") == i + 1
+        assert pool.atomic_fetch_add("ctr0", 5) == 1  # RMW keeps working
+
+
+class TestDrainNode:
+    def test_reads_bit_identical_after_drain(self):
+        pool = MemoryPool(3, stripe_bytes=16 * KIB, replication=2)
+        expected = {f"o{i}": _blob(70 * KIB, seed=10 + i) for i in range(3)}
+        for name, blob in expected.items():
+            pool.alloc(name, blob)
+        stats = pool.drain_node(1)
+        assert stats["drained_nodes"] == [1]
+        _assert_all_readable(pool, expected)
+        assert all(
+            1 not in ext.replicas
+            for po in pool._directory.values() for ext in po.extents
+        )
+        # retired node serves nothing further
+        with pytest.raises(NodeFailure):
+            pool.nodes[1].alloc("y", _blob(1 * KIB))
+
+    def test_replication_preserved_through_drain(self):
+        pool = MemoryPool(3, stripe_bytes=16 * KIB, replication=2)
+        pool.alloc("x", _blob(100 * KIB, seed=3))
+        pool.drain_node(0)
+        for ext in pool._directory["x"].extents:
+            assert len(set(ext.replicas)) == 2
+            assert 0 not in ext.replicas
+
+    def test_atomics_rehomed(self):
+        pool = MemoryPool(3)
+        for i in range(8):
+            pool.atomic_fetch_add(f"ctr{i}", i + 1)
+        pool.drain_node(2)
+        pool.drain_node(1)
+        for i in range(8):
+            assert pool.atomic_read(f"ctr{i}") == i + 1
+
+    def test_refuses_last_node_with_data(self):
+        pool = MemoryPool(1)
+        pool.alloc("x", _blob(8 * KIB))
+        with pytest.raises(NodeFailure):
+            pool.drain_node(0)
+        got, _ = pool.read_object("x")  # refusal lost nothing
+        np.testing.assert_array_equal(got, _blob(8 * KIB))
+
+    def test_refuses_last_node_holding_only_atomics(self):
+        """An atomics-only last node must refuse the drain *before* clearing
+        anything — the counters are state too."""
+        pool = MemoryPool(1)
+        pool.atomic_fetch_add("ctr", 7)
+        with pytest.raises(NodeFailure):
+            pool.drain_node(0)
+        assert pool.atomic_read("ctr") == 7  # refusal lost nothing
+
+    def test_empty_last_node_can_drain(self):
+        pool = MemoryPool(1)
+        pool.drain_node(0)
+        assert len(pool.alive_nodes()) == 0
+
+    def test_refuses_when_survivors_lack_capacity(self):
+        pool = MemoryPool(2, stripe_bytes=16 * KIB,
+                          node_capacity_bytes=64 * KIB)
+        blob = _blob(100 * KIB, seed=5)
+        pool.alloc("x", blob)
+        with pytest.raises(MemoryError):
+            pool.drain_node(0)
+        got, _ = pool.read_object("x")  # data fully intact after refusal
+        np.testing.assert_array_equal(got, blob)
+        # growing first unblocks the drain
+        pool.add_nodes(2)
+        pool.drain_node(0)
+        got, _ = pool.read_object("x")
+        np.testing.assert_array_equal(got, blob)
+
+    def test_capacity_refusal_preserves_replication(self):
+        """A refused drain must leave every extent at full replication —
+        the capacity fallback may never trade a survivor's copy for one
+        pinned on the draining node."""
+        pool = MemoryPool(3, stripe_bytes=16 * KIB, replication=2,
+                          node_capacity_bytes=40 * KIB)
+        blob = _blob(48 * KIB, seed=9)  # 3 extents x 2 replicas, ~32K/node
+        pool.alloc("x", blob)
+        with pytest.raises(MemoryError):
+            pool.drain_node(0)  # survivors lack headroom for a 3rd extent
+        got, _ = pool.read_object("x")
+        np.testing.assert_array_equal(got, blob)
+        for ext in pool._directory["x"].extents:
+            assert len(pool._live_replicas("x", ext)) == 2
+
+    def test_batch_drain_is_one_migration_pass(self):
+        pool = MemoryPool(4, stripe_bytes=16 * KIB)
+        expected = {f"o{i}": _blob(60 * KIB, seed=20 + i) for i in range(3)}
+        for name, blob in expected.items():
+            pool.alloc(name, blob)
+        stats = pool.drain_nodes([1, 3])
+        assert stats["drained_nodes"] == [1, 3]
+        assert len(pool._resizes) == 1  # shrink-by-2 = one re-stripe
+        _assert_all_readable(pool, expected)
+        assert all(
+            not ({1, 3} & set(ext.replicas))
+            for po in pool._directory.values() for ext in po.extents
+        )
+
+    def test_oscillating_resize_reuses_retired_slots(self):
+        """Grow/shrink cycles must not grow self.nodes without bound."""
+        pool = MemoryPool(1, stripe_bytes=8 * KIB)
+        blob = _blob(40 * KIB, seed=2)
+        pool.alloc("x", blob)
+        pool.atomic_fetch_add("ctr", 3)
+        for _ in range(3):
+            pool.add_nodes(2)
+            alive = sorted(n.node_id for n in pool.alive_nodes())
+            pool.drain_nodes(alive[1:])
+        assert len(pool.nodes) == 3  # retired slots reused, not appended
+        got, _ = pool.read_object("x")
+        np.testing.assert_array_equal(got, blob)
+        assert pool.atomic_read("ctr") == 3  # survived every membership flip
+
+    def test_drain_then_write_then_read(self):
+        pool = MemoryPool(3, stripe_bytes=16 * KIB)
+        pool.alloc("x", _blob(90 * KIB, seed=1))
+        pool.drain_node(2)
+        new = _blob(90 * KIB, seed=2)
+        pool.write("x", new)
+        got, _ = pool.read_object("x")
+        np.testing.assert_array_equal(got, new)
+
+    def test_alloc_after_drain_avoids_retired_node(self):
+        pool = MemoryPool(3, stripe_bytes=16 * KIB)
+        pool.drain_node(1)
+        pool.alloc("x", _blob(100 * KIB))
+        assert all(
+            1 not in ext.replicas
+            for ext in pool._directory["x"].extents
+        )
+
+
+class TestElasticProperties:
+    """Random alloc/write/resize/drain sequences (ISSUE satellite): every
+    object's read stays bit-identical at every step, and extent placement
+    stays within one stripe of balanced after each ``add_nodes``."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.data())
+    def test_random_resize_sequence(self, data):
+        n0 = data.draw(st.integers(1, 3))
+        repl = data.draw(st.integers(1, 2))
+        pool = MemoryPool(n0, stripe_bytes=8 * KIB, replication=repl)
+        expected: dict[str, np.ndarray] = {}
+        seq = 0
+        n_ops = data.draw(st.integers(4, 9))
+        for _ in range(n_ops):
+            op = data.draw(st.sampled_from(
+                ["alloc", "write", "add_nodes", "drain"]))
+            if op == "alloc":
+                name = f"obj{seq}"
+                seq += 1
+                blob = _blob(data.draw(st.integers(1, 80)) * KIB, seed=seq)
+                pool.alloc(name, blob)
+                expected[name] = blob
+            elif op == "write" and expected:
+                name = data.draw(st.sampled_from(sorted(expected)))
+                seq += 1
+                blob = _blob(expected[name].nbytes, seed=1000 + seq)
+                pool.write(name, blob)
+                expected[name] = blob
+            elif op == "add_nodes":
+                if len(pool.alive_nodes()) >= 6:
+                    continue
+                pool.add_nodes(data.draw(st.integers(1, 2)))
+                _assert_balanced(pool)
+            elif op == "drain":
+                alive = [n.node_id for n in pool.alive_nodes()]
+                if len(alive) <= 1:
+                    continue
+                pool.drain_node(data.draw(st.sampled_from(alive)))
+            _assert_all_readable(pool, expected)
+        _assert_all_readable(pool, expected)
+        assert pool.total_bytes() == sum(b.nbytes for b in expected.values())

@@ -1,10 +1,12 @@
-"""Serving engine: batched generation, determinism, DOLMA cache placement."""
+"""Serving engine: batched generation, determinism, DOLMA cache placement,
+and the output-equivalence battery (tiered + pooled == untiered, bit-exact)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced_config
+from repro.core.tiering import supports_host_offload
 from repro.models import get_model
 from repro.serving import EngineConfig, ServingEngine
 
@@ -95,3 +97,77 @@ def test_kv_overflow_targets_pool(engine_setup):
     for name in demoted_cache:
         got = eng.pool.payload(name)
         np.testing.assert_array_equal(got, np.asarray(leaves[name]))
+
+
+# -- output-equivalence battery (ISSUE 5): tiered+pooled == untiered --------
+def _setup_arch(arch):
+    cfg = reduced_config(get_config(arch), dtype=jnp.float32)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    total = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+    return cfg, params, total
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "glm4-9b"])
+def test_output_equivalence_under_pool_pressure(arch):
+    """Tokens under HBM pressure + pool overflow are bit-identical to the
+    untiered/unpooled engine — tiering must never change what is served."""
+    cfg, params, total = _setup_arch(arch)
+    prompts = np.array([[5, 9, 2, 11], [7, 1, 3, 4]], np.int32)
+    base = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=48))
+    tiered = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=48,
+        hbm_budget_bytes=int(total * 0.15),
+        pool_nodes=2, pool_replication=2, pool_stripe_bytes=64 * 1024,
+    ))
+    assert tiered.placement.remote_names(), "budget applied no pressure"
+    ref = base.generate(prompts, max_new=6)
+    out = tiered.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_multi_wave_reset_roundtrips_pool(engine_setup):
+    """generate -> reset -> generate: reset frees the previous wave's
+    demoted KV entries (no stale pool aliases) and the next wave's overflow
+    round-trips the fresh cache contents bit-identically."""
+    cfg, _model, params = engine_setup
+    total = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=48, hbm_budget_bytes=int(total * 0.15),
+        pool_nodes=2, pool_stripe_bytes=64 * 1024,
+    ))
+    demoted = [n for n in eng.placement.remote_names()
+               if n.startswith("cache")]
+    if not demoted:
+        pytest.skip("budget did not demote any cache tier for this config")
+    prompts = np.array([[5, 9, 2]], np.int32)
+    out1 = eng.generate(prompts, max_new=4)
+    assert any(n.startswith("cache") for n in eng.pool.names())
+
+    eng.reset()
+    # the stale wave's cache objects are gone from the pool (satellite fix)
+    assert not any(n.startswith("cache") for n in eng.pool.names())
+
+    out2 = eng.generate(prompts, max_new=4)
+    np.testing.assert_array_equal(out2, out1)  # fresh wave, same answer
+    leaves = eng._cache_leaves(set(demoted))
+    for name in demoted:
+        np.testing.assert_array_equal(eng.pool.payload(name), leaves[name])
+
+
+def test_placement_summary_records_offload_capability(engine_setup):
+    """The plan summary must state how demotions would be realized on this
+    backend (pinned_host on offload-capable ones) — regression for the dead
+    `supports_host_offload()` branch that recorded nothing."""
+    cfg, _model, params = engine_setup
+    total = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+    tight = ServingEngine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, hbm_budget_bytes=int(total * 0.3)))
+    s = tight.stats()["placement"]
+    assert s["n_remote"] > 0
+    expected = "pinned_host" if supports_host_offload() else None
+    assert s["offload_memory_kind"] == expected
+
+    # no demotions -> nothing to offload, whatever the backend supports
+    roomy = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
+    assert roomy.stats()["placement"]["offload_memory_kind"] is None
