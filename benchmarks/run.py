@@ -34,6 +34,7 @@ def bench_json(path: str) -> dict:
     """Per-workload perf baseline: simulated elapsed + real wall-clock."""
     from repro.core.dual_buffer import DolmaRuntime
     from repro.core.placement import PlacementPolicy
+    from repro.core.telemetry import Telemetry
     from repro.hpc import WORKLOADS, run_workload
 
     scale = 0.2
@@ -56,8 +57,12 @@ def bench_json(path: str) -> dict:
                                            sim_scale=sim_scale), n_iters)
         legacy = run_workload(cls(scale=scale, seed=3),
                               tiered(dual_buffer=True), n_iters)
+        # the pipeline leg runs with telemetry on: spans/counters are read
+        # off the simulated clock only, so elapsed numbers are unchanged —
+        # the MetricsSnapshot rides along in the row for trend analysis
+        tel = Telemetry()
         pipe = run_workload(cls(scale=scale, seed=3),
-                            tiered(pipeline=True), n_iters)
+                            tiered(pipeline=True, telemetry=tel), n_iters)
         assert legacy.checksum == oracle.checksum
         assert pipe.checksum == oracle.checksum
         row = {
@@ -66,6 +71,7 @@ def bench_json(path: str) -> dict:
             "pipeline_elapsed_us": pipe.elapsed_us,
             "pipeline_speedup": legacy.elapsed_us / max(pipe.elapsed_us, 1e-9),
             "wall_s": time.time() - t0,
+            "metrics": tel.snapshot(workload=name, leg="pipeline").to_json(),
         }
         out["workloads"][name] = row
         print(f"bench_json/{name},{row['pipeline_elapsed_us']:.0f},"

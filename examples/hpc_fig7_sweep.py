@@ -1,10 +1,14 @@
 """Reproduce the paper's Fig 7 for any workload on the command line.
 
 Run:  PYTHONPATH=src python examples/hpc_fig7_sweep.py --workload MG
+
+``--trace-out run.json`` additionally records every sweep point with
+telemetry enabled and writes one Chrome-trace JSON (open it at
+https://ui.perfetto.dev — one track per runtime timeline and fabric QP).
 """
 import argparse
 
-from repro.core import DolmaRuntime, ETHERNET_25G, INFINIBAND_100G
+from repro.core import DolmaRuntime, ETHERNET_25G, INFINIBAND_100G, Telemetry
 from repro.core.placement import PlacementPolicy
 from repro.hpc import WORKLOADS, run_workload
 
@@ -18,8 +22,11 @@ def main() -> None:
     ap.add_argument("--workload", default="CG", choices=list(WORKLOADS))
     ap.add_argument("--fabric", default="ib", choices=["ib", "eth"])
     ap.add_argument("--no-dual-buffer", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the sweep (Perfetto)")
     args = ap.parse_args()
 
+    tel = Telemetry() if args.trace_out else None
     fabric = INFINIBAND_100G if args.fabric == "ib" else ETHERNET_25G
     cls = WORKLOADS[args.workload]
     oracle = run_workload(cls(scale=SCALE, seed=1),
@@ -34,12 +41,16 @@ def main() -> None:
             local_fraction=frac, fabric=fabric,
             dual_buffer=not args.no_dual_buffer, sim_scale=SIM,
             policy=PlacementPolicy(all_large_remote=frac < 1.0),
+            timeline=f"main@{frac:.0%}", telemetry=tel,
         )
         r = run_workload(cls(scale=SCALE, seed=1), rt, 5)
         assert abs(r.checksum - oracle.checksum) <= 1e-6 * abs(oracle.checksum)
         print(f"{frac:8.0%} {r.elapsed_us/1e6:9.3f}s "
               f"{r.elapsed_us/oracle.elapsed_us:9.2f} "
               f"{rt.local_capacity_bytes()/1e9:9.2f}GB")
+    if tel is not None:
+        tel.write_chrome_trace(args.trace_out)
+        print(f"trace written to {args.trace_out}")
 
 
 if __name__ == "__main__":

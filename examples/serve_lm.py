@@ -7,7 +7,11 @@ request wave, re-runs the quantitative sizing advisor, and grows/shrinks
 the remote memory pool as the KV working set drifts (DESIGN.md §8).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+
+``--trace-out serve.json`` records wave spans (wall clock) and pool/fabric
+spans (simulated clock) and writes one Chrome-trace JSON for Perfetto.
 """
+import argparse
 import time
 
 import jax
@@ -15,18 +19,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core import Telemetry
 from repro.models import get_model
 from repro.serving import AutoscaleConfig, EngineConfig, ServingEngine
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the run (Perfetto)")
+    args = ap.parse_args()
+    tel = Telemetry() if args.trace_out else None
     cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32,
                          n_layers=4, d_model=128, d_ff=256, vocab_size=1024)
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0), cfg)
 
     engine = ServingEngine(
-        cfg, params, EngineConfig(max_batch=4, max_len=128)
+        cfg, params, EngineConfig(max_batch=4, max_len=128), telemetry=tel
     )
     print("placement:", engine.stats()["placement"])
 
@@ -53,7 +63,7 @@ def main() -> None:
         autoscale=AutoscaleConfig(readvise_every=2,
                                   node_capacity_bytes=64 * 1024,
                                   max_nodes=8),
-    ))
+    ), telemetry=tel)
     for plen in (4, 4, 96, 96, 4, 4):
         wave = rng.integers(0, cfg.vocab_size, (4, plen)).astype(np.int32)
         auto.generate(wave, max_new=8)
@@ -62,6 +72,9 @@ def main() -> None:
         print(f"  wave {entry['wave']:2d}: nodes={entry['n_alive']} "
               f"advised_f={entry['advised_fraction']:.3f} "
               f"deg={entry['resimulated_degradation']:.3f}")
+    if tel is not None:
+        tel.write_chrome_trace(args.trace_out)
+        print(f"trace written to {args.trace_out}")
 
 
 if __name__ == "__main__":

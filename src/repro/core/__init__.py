@@ -4,6 +4,7 @@ from repro.core.fabric import (
     ETHERNET_25G,
     FabricModel,
     FabricResource,
+    FabricTimelines,
     INFINIBAND_100G,
     LOCAL_DDR,
     SimClock,
@@ -20,6 +21,12 @@ from repro.core.placement import (
 from repro.core.pool import ExtentLostError, MemoryPool
 from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
+from repro.core.telemetry import (
+    MetricsSnapshot,
+    NULL_TELEMETRY,
+    Telemetry,
+    validate_chrome_trace,
+)
 from repro.core.sizing import (
     CostModel,
     ModelConfig,
@@ -49,10 +56,13 @@ __all__ = [
     "ExtentLostError",
     "FabricModel",
     "FabricResource",
+    "FabricTimelines",
     "INFINIBAND_100G",
     "LOCAL_DDR",
     "MemoryPool",
     "MetadataTable",
+    "MetricsSnapshot",
+    "NULL_TELEMETRY",
     "NodeFailure",
     "ObjectCatalog",
     "ObjectKind",
@@ -65,6 +75,7 @@ __all__ = [
     "SMALL_OBJECT_BYTES",
     "SimClock",
     "Status",
+    "Telemetry",
     "ThreadBuffers",
     "Tier",
     "TieringConfig",
@@ -87,4 +98,5 @@ __all__ = [
     "supports_host_offload",
     "supports_host_offload_spmd",
     "tiered_scan",
+    "validate_chrome_trace",
 ]

@@ -46,6 +46,7 @@ from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
 from repro.core.placement import PlacementPlan, PlacementPolicy
 from repro.core.pool import MemoryPool
 from repro.core.remote_store import RemoteStore
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
 # A 2-socket Xeon class node (the paper's testbed) for the compute model.
 DEFAULT_COMPUTE_GFLOPS = 60.0
@@ -81,6 +82,7 @@ class DolmaRuntime:
         degradation_target: float = 0.16,
         sizing_profile: "Any | None" = None,
         sizing_iters: int = 10,
+        telemetry: Telemetry | None = None,
     ) -> None:
         # sim_scale: fabric/compute costs are charged at sim_scale x the real
         # array bytes, so small (fast, testable) arrays model paper-scale
@@ -108,9 +110,19 @@ class DolmaRuntime:
         self.pipeline = pipeline
         self.prefetch_window = max(int(prefetch_window), 1)
 
+        # observability: spans/counters recorded against the simulated clock
+        # (reads only — enabling telemetry never changes a benchmark number)
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        if self.telemetry.enabled:
+            self.telemetry.bind_clock(self.clock)
+        # stall/overlap/compute accounting on this runtime's timeline —
+        # always maintained (plain float adds), surfaced by summary()
+        self._time_acct = {"compute_us": 0.0, "stall_us": 0.0,
+                           "overlap_us": 0.0}
         # the remote tier: a single memory node by default, or any object
         # with the store API — notably a multi-node MemoryPool
-        self.store = store or RemoteStore(clock=self.clock, fabric=fabric)
+        self.store = store or RemoteStore(clock=self.clock, fabric=fabric,
+                                          telemetry=telemetry)
         self.metadata = MetadataTable()
         self._live: dict[str, _LiveObject] = {}
         self._finalized = False
@@ -142,7 +154,7 @@ class DolmaRuntime:
         self._pf = {
             "trace_hits": 0, "trace_misses": 0, "prefetched_bytes": 0,
             "demand_bytes": 0, "batched_reads": 0, "evictions": 0,
-            "dropped_mispredicts": 0,
+            "dropped_mispredicts": 0, "window_used": 0,
         }
         # --- quantitative sizing (core.sizing) ---
         # record_profile: keep the full per-step (fetch/commit/compute) event
@@ -367,6 +379,8 @@ class DolmaRuntime:
         self._fetch_done.clear()
         self._settle_cache_occupancy()
         self._fetches_done_at = self.clock.now(self.timeline)
+        t_enter = self._fetches_done_at
+        epoch = self._epoch
         yield self
         self._epoch += 1
         if self.record_profile:
@@ -374,7 +388,7 @@ class DolmaRuntime:
             self._step_events = []
         if self.pipeline:
             if self._stream_debt > 0.0:  # step barrier: all reads landed
-                self.clock.wait_until(self.timeline, self._stream_debt)
+                self._wait(self._stream_debt, "stream")
                 self._stream_debt = 0.0
             self._end_step_pipeline()
         elif self.dual_buffer:
@@ -385,6 +399,10 @@ class DolmaRuntime:
                         name,
                         issue_at=self._fetch_done.get(name, self._fetches_done_at),
                     )
+        self.telemetry.record_span(
+            f"step:{epoch}", track=self.timeline, begin_us=t_enter,
+            end_us=self.clock.now(self.timeline), cat="step", epoch=epoch,
+        )
 
     # -- data path ----------------------------------------------------------
     def fetch(self, name: str) -> np.ndarray:
@@ -427,7 +445,7 @@ class DolmaRuntime:
         covered = 0
         if name in self._prefetched:
             done, covered = self._prefetched.pop(name)
-            self.clock.wait_until(self.timeline, done)  # access barrier
+            self._wait(done, "barrier", obj=name)  # access barrier
         remainder = max(size - covered, 0)
         if remainder > 0:
             mode = "windowed" if self.dual_buffer else "serial"
@@ -435,7 +453,8 @@ class DolmaRuntime:
                 name, nbytes=remainder, chunk_bytes=self._chunk_bytes(),
                 issue_at=self.clock.now(self.timeline), mode=mode,
             )
-            self.clock.wait_until(self.timeline, done)
+            self._wait(done, "fetch", obj=name, nbytes=remainder)
+            self._bump("demand_bytes", remainder)
         self._resident[name] = self._cache_share.get(name, 0)
         self._track_cache(name, lo.obj.size_bytes)
         data = self.store.payload(name)
@@ -486,13 +505,16 @@ class DolmaRuntime:
             epoch=self._epoch, charge_bytes=meta.size_bytes,
         )
         self.metadata.update(name, epoch=self._epoch, status=Status.DIRTY)
+        self.telemetry.instant("commit", track=self.timeline, obj=name,
+                               nbytes=meta.size_bytes)
+        self.telemetry.count("runtime.commit_bytes", meta.size_bytes)
         # the local copy in the cache region is the freshest: stays resident
         if not self.pipeline:
             self._resident[name] = self._cache_share.get(name, 0)
         self._track_cache(name, max(self._resident.get(name, 0),
                                     self._cache_occupancy.get(name, 0)))
         if self.sync_writes:
-            self.clock.wait_until(self.timeline, end)
+            self._wait(end, "commit", obj=name)
 
     def charge_compute(self, *, flops: float = 0.0, bytes_touched: float = 0.0,
                        us: float | None = None) -> float:
@@ -509,9 +531,20 @@ class DolmaRuntime:
             us = max(flop_us, mem_us)
         if self.record_profile:
             self._step_events.append(("compute", us))
+        t0 = self.clock.now(self.timeline)
         t = self.clock.advance(self.timeline, us)
+        self._time_acct["compute_us"] += us
+        if us > 0.0:
+            self.telemetry.record_span("compute", track=self.timeline,
+                                       begin_us=t0, end_us=t, cat="compute")
+            self.telemetry.count("runtime.compute_us", us)
         if self._stream_debt > 0.0:
-            t = self.clock.wait_until(self.timeline, self._stream_debt)
+            # the portion of the posted stream hidden under this compute
+            overlap = max(min(self._stream_debt, t) - t0, 0.0)
+            if overlap > 0.0:
+                self._time_acct["overlap_us"] += overlap
+                self.telemetry.count("runtime.overlap_us", overlap)
+            t = self._wait(self._stream_debt, "stream")
             self._stream_debt = 0.0
         return t
 
@@ -600,8 +633,44 @@ class DolmaRuntime:
                 prediction_len=len(self._prediction),
             ),
             reuse_distances=self.metadata.reuse_stats(),
+            time_accounting=dict(self._time_acct),
         )
         return s
+
+    def summary(self) -> dict[str, Any]:
+        """Run-level observability digest: reuse stats, per-object
+        fetch/commit counters, prefetch accuracy, and time accounting.
+
+        Unlike :meth:`stats` (which folds in the store's transfer stats),
+        this is the flat per-object view the telemetry exporters and the
+        examples print.
+        """
+        used = self._pf.get("window_used", 0)
+        dropped = self._pf.get("dropped_mispredicts", 0)
+        denom = used + dropped
+        return {
+            "elapsed_us": self.elapsed_us(),
+            "epochs": self._epoch,
+            "plan": self.plan.summary() if self.plan else None,
+            "reuse_stats": self.metadata.reuse_stats(),
+            "access_counts": self.metadata.access_counts(),
+            "prefetch": dict(self._pf),
+            "prefetch_accuracy": (used / denom) if denom else None,
+            "time_accounting": dict(self._time_acct),
+        }
+
+    def drain(self) -> float:
+        """Fence async writes on this runtime's timeline (recorded as a
+        stall span so drained tail demotions show up in the trace)."""
+        t0 = self.clock.now(self.timeline)
+        end = self.store.fence(timeline=self.timeline)
+        t = self.clock.now(self.timeline)
+        if t > t0:
+            self._time_acct["stall_us"] += t - t0
+            self.telemetry.record_span("stall:drain", track=self.timeline,
+                                       begin_us=t0, end_us=t, cat="stall")
+            self.telemetry.count("runtime.stall_us", t - t0, reason="drain")
+        return end
 
     # -- trace-driven pipeline internals ----------------------------------
     def _fetch_pipelined(self, name: str, meta: ObjectMeta) -> np.ndarray:
@@ -609,12 +678,13 @@ class DolmaRuntime:
         predicted = name in self._pred_index
         if name in self._inflight:
             done, covered = self._inflight.pop(name)
-            self.clock.wait_until(self.timeline, done)  # barrier at first use
+            self._wait(done, "barrier", obj=name)  # barrier at first use
+            self._bump("window_used")
             self._resident[name] = min(
                 self._resident.get(name, 0) + covered, size
             )
         if predicted:
-            self._pf["trace_hits"] += 1
+            self._bump("trace_hits")
             # advance along the prediction and re-pump *before* posting this
             # object's tail: the next window entries are nearer in predicted
             # order, so their (small) heads must not queue behind a large
@@ -622,7 +692,7 @@ class DolmaRuntime:
             self._trace_pos = max(self._trace_pos, self._pred_index[name] + 1)
             self._pump(self.clock.now(self.timeline))
         else:
-            self._pf["trace_misses"] += 1
+            self._bump("trace_misses")
         remainder = size - self._resident.get(name, 0)
         if remainder > 0:
             # Retention grant for the streamed tail is judged by this
@@ -646,7 +716,7 @@ class DolmaRuntime:
                     chunk_bytes=self._pipeline_chunk_bytes(),
                     issue_at=now, mode="pipelined",
                 )
-                self.clock.wait_until(self.timeline, now + self.fabric.read_base_us)
+                self._wait(now + self.fabric.read_base_us, "post", obj=name)
                 self._stream_debt = max(self._stream_debt, end)
             else:
                 # trace miss: consumption order unknown — full synchronous
@@ -655,8 +725,8 @@ class DolmaRuntime:
                     name, nbytes=remainder, chunk_bytes=self._chunk_bytes(),
                     issue_at=now, mode="windowed",
                 )
-                self.clock.wait_until(self.timeline, end)
-            self._pf["demand_bytes"] += remainder
+                self._wait(end, "fetch", obj=name, nbytes=remainder)
+            self._bump("demand_bytes", remainder)
             self._resident[name] = min(self._resident.get(name, 0) + grant, size)
         self._track_cache(name, size)
         data = self.store.payload(name)
@@ -679,7 +749,7 @@ class DolmaRuntime:
             # buffer space is reclaimable immediately
             for stale in [n for n in self._inflight if n not in self._pred_index]:
                 del self._inflight[stale]
-                self._pf["dropped_mispredicts"] += 1
+                self._bump("dropped_mispredicts")
         self._trace_pos = 0
         self._pump(self._fetches_done_at)
 
@@ -719,8 +789,10 @@ class DolmaRuntime:
         )
         for cand, covered in requests:
             self._inflight[cand] = (done[cand], covered)
-            self._pf["prefetched_bytes"] += covered
-        self._pf["batched_reads"] += 1
+            self._bump("prefetched_bytes", covered)
+        self._bump("batched_reads")
+        self.telemetry.instant("pump", track=self.timeline, t_us=at,
+                               window=[n for n, _g in requests])
 
     def _cache_used(self) -> int:
         return (
@@ -755,13 +827,35 @@ class DolmaRuntime:
         for victim in victims:
             if free >= need:
                 break
-            free += self._resident[victim]
+            freed = self._resident[victim]
+            free += freed
             self._resident[victim] = 0
             self._cache_occupancy.pop(victim, None)
-            self._pf["evictions"] += 1
+            self._bump("evictions")
+            self.telemetry.instant("evict", track=self.timeline,
+                                   victim=victim, nbytes=freed)
         return max(min(free, need), 0)
 
     # -- internals --------------------------------------------------------
+    def _bump(self, key: str, n: int = 1) -> None:
+        """Increment a prefetch counter (dict + telemetry registry)."""
+        self._pf[key] = self._pf.get(key, 0) + n
+        self.telemetry.count("prefetch." + key, n)
+
+    def _wait(self, t_us: float, reason: str, **args: Any) -> float:
+        """wait_until on this runtime's timeline, recording any stall as a
+        span so per-timeline span totals tile elapsed time exactly."""
+        now = self.clock.now(self.timeline)
+        t = self.clock.wait_until(self.timeline, t_us)
+        if t > now:
+            self._time_acct["stall_us"] += t - now
+            self.telemetry.record_span(
+                f"stall:{reason}", track=self.timeline,
+                begin_us=now, end_us=t, cat="stall", **args,
+            )
+            self.telemetry.count("runtime.stall_us", t - now, reason=reason)
+        return t
+
     def _chunk_bytes(self) -> int:
         if self.pipeline:
             region = self.cache_region_bytes  # window replaces the two halves
@@ -853,5 +947,5 @@ def run_iterative(
         with runtime.step():
             body(runtime, it)
     # drain async writes so the reported time includes any tail demotion
-    runtime.store.fence(timeline=runtime.timeline)
+    runtime.drain()
     return runtime.elapsed_us()

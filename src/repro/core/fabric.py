@@ -23,6 +23,8 @@ import dataclasses
 import itertools
 import threading
 
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
+
 
 @dataclasses.dataclass(frozen=True)
 class FabricModel:
@@ -185,12 +187,21 @@ class SimClock:
 
     def advance(self, timeline: str, us: float) -> float:
         """Charge ``us`` of busy time to ``timeline``; return its new now."""
+        # `not (us >= 0)` also catches NaN: a single corrupted charge would
+        # silently poison every later timestamp on the timeline (and, via
+        # makespan, every benchmark number derived from it)
+        if not (us >= 0.0):
+            raise ValueError(f"advance({timeline!r}): invalid charge {us!r}")
         with self._lock:
             t = self._timeline_now.get(timeline, 0.0) + us
             self._timeline_now[timeline] = t
             return t
 
     def wait_until(self, timeline: str, t_us: float) -> float:
+        if not (t_us >= 0.0):
+            raise ValueError(
+                f"wait_until({timeline!r}): invalid target {t_us!r}"
+            )
         with self._lock:
             t = max(self._timeline_now.get(timeline, 0.0), t_us)
             self._timeline_now[timeline] = t
@@ -204,6 +215,11 @@ class SimClock:
             self._timeline_now.clear()
 
 
+#: Historical name for the per-timeline fabric clock (docs/issues refer to
+#: the timeline set as "fabric timelines"; the class predates that naming).
+FabricTimelines = SimClock
+
+
 class FabricResource:
     """One RDMA resource (QP + CQ): ops issued on it serialize.
 
@@ -213,10 +229,13 @@ class FabricResource:
 
     _ids = itertools.count()
 
-    def __init__(self, clock: SimClock, model: FabricModel, name: str | None = None):
+    def __init__(self, clock: SimClock, model: FabricModel, name: str | None = None,
+                 *, telemetry: Telemetry | None = None, track: str | None = None):
         self.clock = clock
         self.model = model
         self.name = name or f"qp{next(self._ids)}"
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        self.track = track or f"fabric/{self.name}"
         self._free_at = 0.0
         self._lock = threading.Lock()
         self.bytes_read = 0
@@ -282,6 +301,7 @@ class FabricResource:
                 self.bytes_read += total
             elif kind == "write":
                 self.bytes_written += total
+        self._record(f"{kind}_batch", start, end, total, n_requests=len(sizes))
         return start, completions, end
 
     def _occupy(self, kind: str, size_bytes: int, issue_time_us: float,
@@ -295,4 +315,19 @@ class FabricResource:
                 self.bytes_read += size_bytes
             elif kind == "write":
                 self.bytes_written += size_bytes
+        self._record(kind, start, end, size_bytes)
         return start, end
+
+    def _record(self, kind: str, start: float, end: float, size_bytes: int,
+                **args) -> None:
+        """One span per op on this QP's track + per-track byte/op counters."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        tel.record_span(kind, track=self.track, begin_us=start, end_us=end,
+                        cat="io", nbytes=size_bytes, **args)
+        tel.count("fabric.n_ops", 1, track=self.track)
+        if kind.startswith("read"):
+            tel.count("fabric.bytes_read", size_bytes, track=self.track)
+        elif kind.startswith("write"):
+            tel.count("fabric.bytes_written", size_bytes, track=self.track)

@@ -54,6 +54,7 @@ from repro.core.fabric import (
     SimClock,
 )
 from repro.core.remote_store import NodeFailure, RemoteStore
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
 DEFAULT_STRIPE_BYTES = 1 << 20  # 1 MiB extents (a few RDMA ops each)
 
@@ -117,6 +118,7 @@ class MemoryPool:
         replication: int = 1,
         qps_per_node: int = 1,
         node_capacity_bytes: int | None = None,
+        telemetry: Telemetry | None = None,
     ) -> None:
         if n_nodes < 1:
             raise ValueError("n_nodes must be >= 1")
@@ -130,19 +132,23 @@ class MemoryPool:
         self.replication = min(replication, n_nodes)
         self.qps_per_node = qps_per_node
         self.node_capacity_bytes = node_capacity_bytes
-        self.nodes = [
-            RemoteStore(
-                clock=self.clock,
-                fabric=fabric,
-                n_resources=qps_per_node,
-                node_id=i,
-                capacity_bytes=node_capacity_bytes,
-            )
-            for i in range(n_nodes)
-        ]
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        if self.telemetry.enabled:
+            self.telemetry.bind_clock(self.clock)
+        self.nodes = [self._new_node(i) for i in range(n_nodes)]
         self._directory: dict[str, PoolObject] = {}
         self._failures: list[dict] = []
         self._resizes: list[dict] = []
+
+    def _new_node(self, node_id: int) -> RemoteStore:
+        return RemoteStore(
+            clock=self.clock,
+            fabric=self.fabric,
+            n_resources=self.qps_per_node,
+            node_id=node_id,
+            capacity_bytes=self.node_capacity_bytes,
+            telemetry=self.telemetry,
+        )
 
     # -- topology ----------------------------------------------------------
     @property
@@ -610,6 +616,9 @@ class MemoryPool:
         t = self.clock.now(timeline) if at_us is None else at_us
         self.nodes[node_id].fail(at_us=t)
         self._failures.append({"node": node_id, "at_us": t})
+        self.telemetry.instant("node_fail", track=timeline, t_us=t,
+                               node=node_id)
+        self.telemetry.count("pool.node_failures")
 
     def degraded_extents(self) -> list[tuple[str, Extent]]:
         """Extents with fewer live replicas than the pool's target k."""
@@ -716,13 +725,19 @@ class MemoryPool:
                     ext.replicas = [i for i in ext.replicas
                                     if self.nodes[i].alive] + [target_id]
                     live = self._live_replicas(name, ext)
-        return {
+        stats = {
             "rebuilt_extents": rebuilt,
             "restored_extents": restored,
             "skipped_extents": skipped,
             "recovery_us": max(end - t0, 0.0),
             "alive_nodes": len(alive_ids),
         }
+        self.telemetry.record_span("recover", track=timeline, begin_us=t0,
+                                   end_us=max(end, t0), cat="migration",
+                                   **stats)
+        self.telemetry.count("pool.rebuilt_extents", rebuilt)
+        self.telemetry.count("pool.restored_extents", restored)
+        return stats
 
     # -- elastic capacity: add/drain nodes with background migration ---------
     def rebalance(
@@ -807,7 +822,7 @@ class MemoryPool:
                     if nid not in placed:
                         self.nodes[nid].free(key)
                 ext.replicas = placed
-        return {
+        stats = {
             "moved_extents": moved,
             "moved_bytes": moved_bytes,
             "retained_extents": retained,
@@ -815,6 +830,13 @@ class MemoryPool:
             "n_alive": len(alive_ids),
             "replication": k,
         }
+        self.telemetry.record_span("rebalance", track=timeline, begin_us=t0,
+                                   end_us=max(end, t0), cat="migration",
+                                   **stats)
+        self.telemetry.count("pool.moved_extents", moved)
+        self.telemetry.count("pool.moved_bytes", moved_bytes)
+        self.telemetry.count("pool.migration_us", stats["migration_us"])
+        return stats
 
     def _rehome_atomics(self) -> None:
         """Re-assign every atomic to its current hash target. Atomics route
@@ -848,13 +870,7 @@ class MemoryPool:
             range(len(self.nodes), len(self.nodes) + k - len(free_slots))
         )
         for nid in new_ids:
-            store = RemoteStore(
-                clock=self.clock,
-                fabric=self.fabric,
-                n_resources=self.qps_per_node,
-                node_id=nid,
-                capacity_bytes=self.node_capacity_bytes,
-            )
+            store = self._new_node(nid)
             if nid < len(self.nodes):
                 self.nodes[nid] = store
             else:
@@ -864,6 +880,9 @@ class MemoryPool:
         stats["added_nodes"] = k
         stats["reused_slots"] = len(free_slots)
         self._resizes.append({"op": "add_nodes", "k": k, **stats})
+        self.telemetry.instant("resize:add", track=timeline, k=k,
+                               n_alive=stats["n_alive"])
+        self.telemetry.count("pool.resizes", op="add")
         return stats
 
     def drain_nodes(self, node_ids: Iterable[int], *,
@@ -927,6 +946,9 @@ class MemoryPool:
             self._atomic_node(key).adopt_atomics({key: val})
         stats["drained_nodes"] = draining
         self._resizes.append({"op": "drain_nodes", "nodes": draining, **stats})
+        self.telemetry.instant("resize:drain", track=timeline, nodes=draining,
+                               n_alive=stats["n_alive"])
+        self.telemetry.count("pool.resizes", op="drain")
         return stats
 
     def drain_node(self, node_id: int, *, timeline: str = "migration") -> dict:

@@ -21,6 +21,7 @@ from typing import Iterable
 import numpy as np
 
 from repro.core.fabric import FabricModel, FabricResource, INFINIBAND_100G, SimClock
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
 
 class NodeFailure(RuntimeError):
@@ -49,6 +50,7 @@ class RemoteStore:
         n_resources: int = 1,
         node_id: int = 0,
         capacity_bytes: int | None = None,
+        telemetry: Telemetry | None = None,
     ) -> None:
         self.clock = clock or SimClock()
         self.fabric = fabric
@@ -57,7 +59,14 @@ class RemoteStore:
         self.alive = True
         self.retired = False
         self.failed_at_us: float | None = None
-        self.resources = [FabricResource(self.clock, fabric) for _ in range(n_resources)]
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        if self.telemetry.enabled:
+            self.telemetry.bind_clock(self.clock)
+        self.resources = [
+            FabricResource(self.clock, fabric, telemetry=self.telemetry,
+                           track=f"node{node_id}/qp{i}")
+            for i in range(n_resources)
+        ]
         self._objects: dict[str, RemoteObject] = {}
         self._atomics: dict[str, int] = {}
         self._used_bytes = 0  # running total; keeps capacity checks O(1)

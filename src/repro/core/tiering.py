@@ -132,6 +132,7 @@ def plan_for_params(
     opt_state: Any = None,
     access_counts: dict[str, int] | None = None,
     profile: Any = None,
+    telemetry: Any = None,
 ) -> PlacementPlan:
     """Build a placement plan over the persistent objects of a train step.
 
@@ -186,12 +187,18 @@ def plan_for_params(
         compute_us = catalog.total_bytes / (TPU_V5E_HBM_GBPS * 1e3)
         profile = synthetic_profile(catalog, compute_us_per_step=compute_us,
                                     source="plan_for_params")
-    return PlacementPolicy().plan(
+    plan = PlacementPolicy().plan(
         catalog,
         local_fraction=config.local_fraction,
         profile=profile,
         degradation_target=config.degradation_target,
     )
+    if telemetry is not None and telemetry.enabled:
+        telemetry.instant("tiering.plan", track="tiering", t_us=0.0,
+                          **plan.summary())
+        telemetry.gauge("tiering.local_bytes", plan.local_bytes)
+        telemetry.gauge("tiering.remote_bytes", plan.remote_bytes)
+    return plan
 
 
 def leaf_sharding(

@@ -89,13 +89,16 @@ def pooled_runtime(
     stripe_bytes: int = 1 << 20,
     qps_per_node: int = 1,
     fabric: FabricModel = INFINIBAND_100G,
+    telemetry: "Any | None" = None,
     **runtime_kwargs: Any,
 ) -> DolmaRuntime:
     """A DolmaRuntime whose remote tier is an ``n_nodes`` memory pool.
 
     Drop-in for ``DolmaRuntime(local_fraction=...)`` in any workload/benchmark:
     the pool shares the runtime's clock, so elapsed times compose, and the
-    placement plan homes remote objects across nodes.
+    placement plan homes remote objects across nodes. A ``telemetry`` object
+    is shared by the pool (per-node/QP fabric tracks) and the runtime
+    (compute/stall spans on its timeline).
     """
     pool = MemoryPool(
         n_nodes,
@@ -103,9 +106,10 @@ def pooled_runtime(
         stripe_bytes=stripe_bytes,
         replication=replication,
         qps_per_node=qps_per_node,
+        telemetry=telemetry,
     )
     return DolmaRuntime(local_fraction=local_fraction, fabric=fabric,
-                        store=pool, **runtime_kwargs)
+                        store=pool, telemetry=telemetry, **runtime_kwargs)
 
 
 def profile_workload(

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any
 
 import jax
@@ -39,6 +40,7 @@ from repro.core.sizing import (
     advise_local_size,
     simulate_profile,
 )
+from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 from repro.core.tiering import supports_host_offload
 from repro.models import get_model
 
@@ -82,10 +84,15 @@ class EngineConfig:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params: Any, engine_cfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params: Any, engine_cfg: EngineConfig,
+                 *, telemetry: Telemetry | None = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = engine_cfg
+        # serving spans run on the wall clock (decode is real jax work, not
+        # simulated); fabric/pool spans stay on the shared simulated clock
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        self._t0_wall = time.perf_counter()
         self.model = get_model(cfg)
         self.cache = self.model.init_decode_cache(
             cfg, engine_cfg.max_batch, engine_cfg.max_len
@@ -186,6 +193,7 @@ class ServingEngine:
                 self._pool_target_nodes,
                 replication=self.ecfg.pool_replication,
                 stripe_bytes=self.ecfg.pool_stripe_bytes,
+                telemetry=self.telemetry,
             )
         leaves = self._cache_leaves(set(demoted))
         for name in demoted:
@@ -253,6 +261,9 @@ class ServingEngine:
         for name in committed:
             events.append(("commit", name))
         self._rolling.append_wave(events, rows)
+        kv_bytes = sum(p.size_bytes for p in rows.values()
+                       if p.kind == ObjectKind.KV_CACHE.value)
+        self.telemetry.gauge("serving.kv_occupancy_bytes", kv_bytes)
         self._wave += 1
 
     def _resize_pool(self, target: int) -> dict | None:
@@ -351,9 +362,20 @@ class ServingEngine:
             "migration": migration,
         }
         self.autoscale_log.append(entry)
+        self.telemetry.instant(
+            "readvise", track="serving", t_us=self._now_us(),
+            wave=entry["wave"], advised_fraction=advice.advised_fraction,
+            target_nodes=target, feasible=advice.feasible,
+            resimulated_degradation=resim,
+        )
+        self.telemetry.count("serving.readvise")
+        self.telemetry.gauge("serving.target_nodes", target)
         return entry
 
     # -- decoding ----------------------------------------------------------
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0_wall) * 1e6
+
     def generate(self, prompts: np.ndarray, max_new: int = 16) -> np.ndarray:
         """Greedy batched generation. prompts: (B, P) int32, B <= max_batch.
 
@@ -365,20 +387,39 @@ class ServingEngine:
         assert B <= self.ecfg.max_batch
         pad = self.ecfg.max_batch - B
         toks = np.pad(prompts, ((0, pad), (0, 0))).astype(np.int32)
+        wave_id = self._wave
+        t_begin = self._now_us()
+        step_us: list[float] = []
 
         cache = self.cache
         logits = None
         for t in range(P):
+            t0 = time.perf_counter()
             logits, cache = self._step(self.params, cache, toks[:, t:t + 1])
+            step_us.append((time.perf_counter() - t0) * 1e6)
         out = []
         cur = jnp.argmax(logits[:, :, : self.cfg.vocab_size], axis=-1).astype(jnp.int32)
         for _ in range(max_new):
             out.append(np.asarray(cur))
+            t0 = time.perf_counter()
             logits, cache = self._step(self.params, cache, cur)
+            step_us.append((time.perf_counter() - t0) * 1e6)
             cur = jnp.argmax(
                 logits[:, :, : self.cfg.vocab_size], axis=-1
             ).astype(jnp.int32)
         self.cache = cache
+        if self.telemetry.enabled and step_us:
+            p50 = float(np.percentile(step_us, 50))
+            p99 = float(np.percentile(step_us, 99))
+            self.telemetry.record_span(
+                f"wave:{wave_id}", track="serving", begin_us=t_begin,
+                end_us=self._now_us(), cat="serve", batch=B, prompt_len=P,
+                new_tokens=max_new, p50_step_us=p50, p99_step_us=p99,
+            )
+            self.telemetry.gauge("serving.p50_step_us", p50)
+            self.telemetry.gauge("serving.p99_step_us", p99)
+            self.telemetry.count("serving.waves")
+            self.telemetry.count("serving.tokens", B * max_new)
         acfg = self.ecfg.autoscale
         if acfg is not None:
             try:

@@ -106,3 +106,41 @@ class TestTwoLevelScheduler:
         t1 = self._mk(1, 4).simulate(**kw)
         t8 = self._mk(8, 4).simulate(**kw)
         assert t8 < t1
+
+
+class TestClockGuards:
+    """advance/wait_until reject invalid charges (negative, NaN)."""
+
+    def test_advance_negative_raises(self):
+        clock = SimClock()
+        with pytest.raises(ValueError, match="advance"):
+            clock.advance("main", -1.0)
+
+    def test_advance_nan_raises(self):
+        clock = SimClock()
+        with pytest.raises(ValueError, match="advance"):
+            clock.advance("main", float("nan"))
+
+    def test_wait_until_negative_raises(self):
+        clock = SimClock()
+        with pytest.raises(ValueError, match="wait_until"):
+            clock.wait_until("main", -0.5)
+
+    def test_wait_until_nan_raises(self):
+        clock = SimClock()
+        with pytest.raises(ValueError, match="wait_until"):
+            clock.wait_until("main", float("nan"))
+
+    def test_valid_charges_unaffected(self):
+        clock = SimClock()
+        clock.advance("main", 0.0)
+        clock.advance("main", 5.0)
+        assert clock.wait_until("main", 3.0) == 5.0  # past target: no-op
+        assert clock.now("main") == 5.0
+
+    def test_guard_leaves_timeline_untouched(self):
+        clock = SimClock()
+        clock.advance("main", 2.0)
+        with pytest.raises(ValueError):
+            clock.advance("main", float("nan"))
+        assert clock.now("main") == 2.0

@@ -1,0 +1,309 @@
+"""Telemetry: span tracing, counters, exporters, and the reconciliation
+contract (compute+stall spans tile a runtime timeline exactly)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MemoryPool,
+    MetricsSnapshot,
+    NULL_TELEMETRY,
+    SimClock,
+    Telemetry,
+    validate_chrome_trace,
+)
+from repro.core.dual_buffer import DolmaRuntime, run_iterative
+from repro.core.placement import PlacementPolicy
+from repro.hpc import WORKLOADS, pooled_runtime, run_workload
+
+KB = 1 << 10
+
+
+class TestSpans:
+    def test_span_nesting_on_sim_clock(self):
+        clock = SimClock()
+        tel = Telemetry(clock=clock)
+        with tel.span("step", timeline="main", cat="step"):
+            clock.advance("main", 5.0)
+            with tel.span("fetch", timeline="main", obj="x"):
+                clock.advance("main", 7.0)
+            clock.advance("main", 3.0)
+        # inner span closes first; both are clocked on the simulated timeline
+        inner, outer = tel.spans
+        assert inner.name == "fetch" and outer.name == "step"
+        assert outer.begin_us == 0.0 and outer.end_us == 15.0
+        assert inner.begin_us == 5.0 and inner.end_us == 12.0
+        assert outer.begin_us <= inner.begin_us <= inner.end_us <= outer.end_us
+        assert inner.args == {"obj": "x"}
+
+    def test_record_span_explicit_times(self):
+        tel = Telemetry()
+        tel.record_span("read", track="node0/qp0", begin_us=10.0,
+                        end_us=30.0, cat="io", nbytes=4096)
+        (s,) = tel.spans
+        assert s.dur_us == 20.0 and s.cat == "io"
+        assert tel.track_total_us("node0/qp0", cats=("io",)) == 20.0
+
+    def test_disabled_records_nothing(self):
+        clock = SimClock()
+        tel = Telemetry(clock=clock, enabled=False)
+        with tel.span("step"):
+            clock.advance("main", 5.0)
+        tel.record_span("x", track="t", begin_us=0.0, end_us=1.0)
+        tel.instant("i", track="t")
+        tel.count("c")
+        tel.gauge("g", 1.0)
+        assert not tel.spans and not tel.instants
+        assert not tel.counters and not tel.gauges
+        assert NULL_TELEMETRY.enabled is False
+
+    def test_max_events_drops_and_reports(self):
+        tel = Telemetry(max_events=2)
+        for i in range(4):
+            tel.record_span(f"s{i}", track="t", begin_us=0.0, end_us=1.0)
+        assert len(tel.spans) == 2
+        assert tel.dropped_events == 2
+        assert tel.snapshot().meta["dropped_events"] == 2
+
+
+class TestCountersAcrossResize:
+    def _pool(self, tel, n=2):
+        pool = MemoryPool(n, stripe_bytes=16 * KB, telemetry=tel)
+        rng = np.random.default_rng(0)
+        for i in range(4):
+            pool.alloc(f"obj{i}", rng.random(64 * KB // 8))  # 4 stripes each
+        return pool
+
+    def test_resize_counters_aggregate(self):
+        tel = Telemetry()
+        pool = self._pool(tel)
+        grow = pool.add_nodes(2)
+        alive = sorted(n.node_id for n in pool.alive_nodes())
+        shrink = pool.drain_nodes(alive[-1:])
+        assert tel.counter("pool.resizes", op="add") == 1
+        assert tel.counter("pool.resizes", op="drain") == 1
+        # counter totals reconcile with the per-pass migration stats
+        moved = grow["moved_bytes"] + shrink["moved_bytes"]
+        assert tel.counter("pool.moved_bytes") == moved
+        assert moved > 0
+
+    def test_migration_spans_recorded(self):
+        tel = Telemetry()
+        pool = self._pool(tel)
+        pool.add_nodes(1)
+        spans = tel.spans_on("migration", cats=("migration",))
+        assert spans and all(s.name == "rebalance" for s in spans)
+        assert all(s.dur_us >= 0 for s in spans)
+        names = {i.name for i in tel.instants}
+        assert "resize:add" in names
+
+    def test_fabric_io_counters_per_node(self):
+        tel = Telemetry()
+        pool = self._pool(tel)
+        pool.read("obj0")
+        read = sum(v for k, v in tel.counters.items()
+                   if k.startswith("fabric.bytes_read"))
+        assert read >= 64 * KB
+
+
+class _WindowWorkload:
+    """Per-iteration access schedule over remote objects of given sizes
+    (the last schedule entry repeats for any remaining iterations)."""
+
+    def __init__(self, rt, sizes, schedule):
+        self.schedule = schedule
+        rng = np.random.default_rng(1)
+        for n, s in sizes.items():
+            rt.alloc(n, rng.random(s // 8))
+
+    def body(self, rt, it):
+        for n in self.schedule[min(it, len(self.schedule) - 1)]:
+            rt.fetch(n)
+            rt.charge_compute(us=50.0)
+
+
+def _window_runtime(frac=0.6, **kw):
+    return DolmaRuntime(
+        local_fraction=frac, pipeline=True, prefetch_window=2,
+        policy=PlacementPolicy(all_large_remote=True), **kw,
+    )
+
+
+class TestPrefetchAccuracy:
+    def test_stable_trace_is_fully_accurate(self):
+        tel = Telemetry()
+        rt = _window_runtime(telemetry=tel)
+        names = [f"o{i}" for i in range(4)]
+        wl = _WindowWorkload(rt, {n: 16 * KB for n in names}, [names])
+        rt.finalize()
+        run_iterative(rt, 4, wl.body)
+        s = rt.summary()
+        assert s["prefetch"]["window_used"] > 0
+        assert s["prefetch"]["dropped_mispredicts"] == 0
+        assert s["prefetch_accuracy"] == 1.0
+        assert tel.counter("prefetch.window_used") == s["prefetch"]["window_used"]
+
+    def test_shrinking_trace_drops_mispredicts(self):
+        # the read set shrinks each iteration: window entries posted from
+        # the old prediction get disowned at the step boundary (drops)
+        rt = _window_runtime(frac=0.5)
+        sizes = {"o0": 16 * KB, "o1": 16 * KB, "o2": 16 * KB, "o3": 64 * KB}
+        wl = _WindowWorkload(rt, sizes, [
+            ["o0", "o1", "o2", "o3"],
+            ["o0", "o1", "o2"],
+            ["o0", "o1"],
+        ])
+        rt.finalize()
+        run_iterative(rt, 4, wl.body)
+        s = rt.summary()
+        assert s["prefetch"]["dropped_mispredicts"] > 0
+        assert s["prefetch"]["window_used"] > 0
+        assert s["prefetch_accuracy"] is not None
+        assert s["prefetch_accuracy"] < 1.0
+
+    def test_accuracy_none_before_any_window_activity(self):
+        rt = _window_runtime()
+        _WindowWorkload(rt, {"o0": 16 * KB}, [["o0"]])
+        rt.finalize()
+        assert rt.summary()["prefetch_accuracy"] is None
+
+
+class TestReconciliation:
+    """The acceptance contract: per-timeline span totals == elapsed_us."""
+
+    @pytest.mark.parametrize("wl", ["CG", "MG"])
+    def test_pipeline_spans_tile_timeline(self, wl):
+        tel = Telemetry()
+        rt = pooled_runtime(2, local_fraction=0.25, pipeline=True,
+                            telemetry=tel)
+        res = run_workload(WORKLOADS[wl](), rt, n_iters=4)
+        # rt.elapsed_us() is the current clock (the checksum read after the
+        # run advances it past the WorkloadResult snapshot for some loads)
+        total = tel.track_total_us(rt.timeline)  # compute + stall spans
+        assert total == pytest.approx(rt.elapsed_us(), rel=1e-9)
+        assert res.elapsed_us <= rt.elapsed_us()
+        acct = rt.summary()["time_accounting"]
+        assert acct["compute_us"] + acct["stall_us"] == pytest.approx(
+            rt.elapsed_us(), rel=1e-9)
+
+    def test_legacy_spans_tile_timeline(self):
+        tel = Telemetry()
+        rt = DolmaRuntime(local_fraction=0.25, dual_buffer=True,
+                          policy=PlacementPolicy(all_large_remote=True),
+                          telemetry=tel)
+        run_workload(WORKLOADS["CG"](), rt, n_iters=4)
+        assert tel.track_total_us(rt.timeline) == pytest.approx(
+            rt.elapsed_us(), rel=1e-9)
+
+    def test_telemetry_changes_no_numbers(self):
+        """Enabled vs. disabled (default) must be simulation-identical."""
+        on = run_workload(
+            WORKLOADS["CG"](),
+            pooled_runtime(2, local_fraction=0.25, pipeline=True,
+                           telemetry=Telemetry()),
+            n_iters=4,
+        )
+        off = run_workload(
+            WORKLOADS["CG"](),
+            pooled_runtime(2, local_fraction=0.25, pipeline=True),
+            n_iters=4,
+        )
+        assert on.elapsed_us == off.elapsed_us
+        assert on.checksum == off.checksum
+
+
+class TestSummary:
+    def test_summary_exposes_reuse_and_access_counts(self):
+        rt = _window_runtime()
+        wl = _WindowWorkload(rt, {"a": 16 * KB, "b": 16 * KB},
+                             [["a", "b"]])
+        rt.finalize()
+        run_iterative(rt, 3, wl.body)
+        s = rt.summary()
+        assert s["epochs"] == 3
+        assert s["access_counts"]["a"] == (3, 0)  # 3 fetches, 0 commits
+        assert "a" in s["reuse_stats"] or "b" in s["reuse_stats"]
+        assert s["plan"] is not None
+        assert s["elapsed_us"] == rt.elapsed_us()
+        assert set(s["time_accounting"]) == {"compute_us", "stall_us",
+                                             "overlap_us"}
+
+
+class TestChromeTrace:
+    def _recorded(self):
+        tel = Telemetry()
+        tel.record_span("read", track="node0/qp0", begin_us=0.0,
+                        end_us=12.5, cat="io", nbytes=4096)
+        tel.record_span("compute", track="main", begin_us=0.0, end_us=40.0,
+                        cat="compute")
+        tel.instant("evict", track="main", t_us=20.0, victim="x")
+        tel.count("prefetch.trace_hits", 3)
+        return tel
+
+    def test_schema_round_trip(self, tmp_path):
+        tel = self._recorded()
+        path = tmp_path / "trace.json"
+        tel.write_chrome_trace(str(path))
+        trace = json.loads(path.read_text())
+        validate_chrome_trace(trace)  # no raise
+        # one named track per tid used, spans carry ts/dur, instants scope
+        xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+        assert {e["name"] for e in xs} == {"read", "compute"}
+        names = {e["args"]["name"] for e in trace["traceEvents"]
+                 if e["ph"] == "M" and e["name"] == "thread_name"}
+        assert names == {"node0/qp0", "main"}
+        assert trace["otherData"]["counters"]["prefetch.trace_hits"] == 3
+
+    def test_validator_rejects_missing_thread_name(self):
+        trace = self._recorded().to_chrome_trace()
+        trace["traceEvents"] = [e for e in trace["traceEvents"]
+                                if e["name"] != "thread_name"]
+        with pytest.raises(ValueError, match="thread_name"):
+            validate_chrome_trace(trace)
+
+    def test_validator_rejects_negative_dur(self):
+        trace = self._recorded().to_chrome_trace()
+        for e in trace["traceEvents"]:
+            if e["ph"] == "X":
+                e["dur"] = -1.0
+        with pytest.raises(ValueError, match="dur"):
+            validate_chrome_trace(trace)
+
+    def test_validator_rejects_unknown_phase(self):
+        trace = self._recorded().to_chrome_trace()
+        trace["traceEvents"][-1]["ph"] = "Z"
+        with pytest.raises(ValueError, match="phase"):
+            validate_chrome_trace(trace)
+
+    def test_validator_rejects_non_list_events(self):
+        with pytest.raises(ValueError, match="list"):
+            validate_chrome_trace({"traceEvents": {}})
+
+
+class TestMetricsSnapshot:
+    def test_json_round_trip(self):
+        snap = MetricsSnapshot(counters={"a": 1.0}, gauges={"g": 2.0},
+                               meta={"run": "x"})
+        again = MetricsSnapshot.from_json(
+            json.loads(json.dumps(snap.to_json())))
+        assert again == snap
+
+    def test_diff(self):
+        a = MetricsSnapshot(counters={"hits": 2.0, "same": 1.0},
+                            gauges={"nodes": 2.0, "keep": 7.0})
+        b = MetricsSnapshot(counters={"hits": 5.0, "same": 1.0,
+                                      "new": 4.0},
+                            gauges={"nodes": 3.0, "keep": 7.0})
+        d = a.diff(b)
+        assert d["counters"] == {"hits": 3.0, "new": 4.0}
+        assert d["gauges"] == {"nodes": (2.0, 3.0)}
+
+    def test_snapshot_diff_across_pool_resize(self):
+        tel = Telemetry()
+        pool = MemoryPool(2, stripe_bytes=16 * KB, telemetry=tel)
+        pool.alloc("x", np.random.default_rng(0).random(8 * KB // 8))
+        before = tel.snapshot()
+        pool.add_nodes(1)
+        delta = before.diff(tel.snapshot())
+        assert delta["counters"].get("pool.resizes{op=add}") == 1.0
