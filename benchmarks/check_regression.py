@@ -1,6 +1,6 @@
 """Perf-regression gate: compare fresh --bench-json runs to the baselines.
 
-Two committed perf contracts are enforced:
+Three committed perf contracts are enforced:
 
 * ``BENCH_pr3.json`` — the trace pipeline's speedup over the legacy dual
   buffer, per workload. This script fails (exit 1) when any workload's
@@ -12,13 +12,21 @@ Two committed perf contracts are enforced:
   is deterministic by construction — compute charges are modeled, not
   measured), that ``max_degradation`` stays under the committed target,
   and that ``mean_saving`` has not dropped more than ``--tolerance``.
+* ``BENCH_pr7.json`` — the slab allocator under churn
+  (``benchmarks/fig_alloc_churn.py --bench-json``). The gate checks that
+  external fragmentation stays within the committed bound at every
+  compaction checkpoint (the churn is seeded, so frag ratios are
+  deterministic), and that churn throughput (``ops_per_s``, real
+  wall-clock) has not dropped more than ``--churn-tolerance`` (default
+  50% — wall time is the one noisy metric here).
 
-CI runs both in the ``bench-regression`` job; run them locally the same way:
+CI runs all three in the ``bench-regression`` job; locally the same way:
 
     PYTHONPATH=src python -m benchmarks.run --bench-json /tmp/bench.json
     PYTHONPATH=src python -m benchmarks.fig_autoscale --bench-json /tmp/pr5.json
+    PYTHONPATH=src python -m benchmarks.fig_alloc_churn --bench-json /tmp/pr7.json
     python -m benchmarks.check_regression --current /tmp/bench.json \\
-        --pr5-current /tmp/pr5.json
+        --pr5-current /tmp/pr5.json --pr7-current /tmp/pr7.json
 """
 from __future__ import annotations
 
@@ -28,7 +36,9 @@ import sys
 
 DEFAULT_BASELINE = "BENCH_pr3.json"
 DEFAULT_PR5_BASELINE = "BENCH_pr5.json"
+DEFAULT_PR7_BASELINE = "BENCH_pr7.json"
 DEFAULT_TOLERANCE = 0.10
+DEFAULT_CHURN_TOLERANCE = 0.50
 METRIC = "pipeline_speedup"
 
 
@@ -95,6 +105,48 @@ def compare_autoscale(baseline: dict, current: dict, tolerance: float) -> list[s
     return problems
 
 
+def compare_churn(baseline: dict, current: dict, tolerance: float) -> list[str]:
+    """Gate the allocator-churn contract (empty = pass).
+
+    Fragmentation ratios are exact functions of the seeded churn, so both
+    runs must respect the *committed* bound; throughput is real wall-clock
+    and gets the (wide) churn tolerance instead.
+    """
+    problems: list[str] = []
+    for key in (
+        "rounds",
+        "frag_bound",
+        "max_frag_ratio",
+        "final_frag_ratio",
+        "ops_per_s",
+    ):
+        if key not in baseline:
+            problems.append(f"churn baseline missing {key!r}")
+        if key not in current:
+            problems.append(f"churn current run missing {key!r}")
+    if problems:
+        return problems
+    if current["rounds"] != baseline["rounds"]:
+        problems.append(
+            f"churn: rounds {current['rounds']} != baseline "
+            f"{baseline['rounds']} (not comparable)"
+        )
+    bound = baseline["frag_bound"]
+    for key in ("max_frag_ratio", "final_frag_ratio"):
+        if current[key] > bound + 1e-9:
+            problems.append(
+                f"churn: {key} {current[key]:.4f} > committed bound {bound}"
+            )
+    floor = baseline["ops_per_s"] * (1.0 - tolerance)
+    if current["ops_per_s"] < floor:
+        problems.append(
+            f"churn: ops_per_s {current['ops_per_s']:.0f} < floor "
+            f"{floor:.0f} (baseline {baseline['ops_per_s']:.0f}, "
+            f"tolerance {tolerance:.0%})"
+        )
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -116,14 +168,31 @@ def main(argv: list[str] | None = None) -> int:
         help="fresh fig_autoscale --bench-json output to check",
     )
     parser.add_argument(
+        "--pr7-baseline",
+        default=DEFAULT_PR7_BASELINE,
+        help=f"committed alloc-churn baseline (default {DEFAULT_PR7_BASELINE})",
+    )
+    parser.add_argument(
+        "--pr7-current",
+        default=None,
+        help="fresh fig_alloc_churn --bench-json output to check",
+    )
+    parser.add_argument(
         "--tolerance",
         type=float,
         default=DEFAULT_TOLERANCE,
         help="allowed relative metric drop (default 0.10)",
     )
+    parser.add_argument(
+        "--churn-tolerance",
+        type=float,
+        default=DEFAULT_CHURN_TOLERANCE,
+        help="allowed relative churn-throughput drop (default 0.50; "
+        "wall-clock is noisy on shared CI runners)",
+    )
     args = parser.parse_args(argv)
-    if args.current is None and args.pr5_current is None:
-        parser.error("pass --current and/or --pr5-current")
+    if args.current is None and args.pr5_current is None and args.pr7_current is None:
+        parser.error("pass --current, --pr5-current, and/or --pr7-current")
 
     problems: list[str] = []
     n_checked = 0
@@ -153,6 +222,20 @@ def main(argv: list[str] | None = None) -> int:
             f"check_regression/autoscale,"
             f"{pr5_current.get('max_degradation', float('nan')):.3f},"
             f"nodes={pr5_current.get('nodes_trajectory')}"
+        )
+
+    if args.pr7_current is not None:
+        with open(args.pr7_baseline) as f:
+            pr7_baseline = json.load(f)
+        with open(args.pr7_current) as f:
+            pr7_current = json.load(f)
+        problems += compare_churn(pr7_baseline, pr7_current, args.churn_tolerance)
+        n_checked += 1
+        print(
+            f"check_regression/alloc_churn,"
+            f"{pr7_current.get('ops_per_s', float('nan')):.0f},"
+            f"max_frag={pr7_current.get('max_frag_ratio', float('nan')):.4f} "
+            f"bound={pr7_baseline.get('frag_bound')}"
         )
 
     if problems:

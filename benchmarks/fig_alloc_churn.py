@@ -1,0 +1,239 @@
+"""MIND-style allocator churn: slabs, arenas, and compaction under load.
+
+Drives a multi-node :class:`MemoryPool` through thousands of random
+alloc / write / read / free / object-resize rounds from two tenant arenas
+("hpc" and "serving"), with autoscale-style pool resizes (``add_nodes`` /
+``drain_nodes``) and periodic background compaction — the PR-7 allocator's
+adversarial workload.
+
+Asserted at every compaction checkpoint (the PR's acceptance bar):
+
+  * every read is bit-identical to a flat numpy oracle, throughout;
+  * external fragmentation after compaction ≤ 10% of live bytes;
+  * external fragmentation never increases across a compaction pass;
+  * ``check_no_orphans()`` stays clean (allocator/node/directory agree);
+
+and at steady state: a second compaction plans zero moves, and slab-aware
+placement plans taken before/after compaction ``diff_plans`` to a no-op —
+compaction changes fragmentation, never membership.
+
+``--smoke`` runs a shortened churn (CI's alloc-churn job);
+``--bench-json PATH`` writes the allocator perf contract consumed by
+``benchmarks/check_regression.py`` (committed as ``BENCH_pr7.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.objects import DataObject, ObjectCatalog
+from repro.core.placement import PlacementPolicy, diff_plans
+from repro.core.pool import MemoryPool
+from repro.core.telemetry import Telemetry
+
+from benchmarks.common import emit, save_json
+
+KIB = 1 << 10
+STRIPE = 32 * KIB
+FRAG_BOUND = 0.10          # external frag ≤ 10% of live bytes, post-compaction
+ARENAS = ("hpc", "serving")
+MIN_LIVE, MAX_LIVE = 240, 420
+MIN_OBJ, MAX_OBJ = 2 * KIB, 64 * KIB   # sub-class tails through 2-stripe
+
+
+def _catalog(pool: MemoryPool, oracle: dict[str, np.ndarray]) -> ObjectCatalog:
+    """The live set as a placement catalog (sizes only drive the plan)."""
+    return ObjectCatalog([
+        DataObject(name=n, shape=a.shape, dtype=a.dtype, n_reads=1)
+        for n, a in sorted(oracle.items())
+    ])
+
+
+def _steady_state_plan(pool: MemoryPool, oracle: dict[str, np.ndarray]):
+    """Slab-aware plan over the live set with measured fragmentation."""
+    alive = [n.node_id for n in pool.alive_nodes()]
+    frag = {nid: float(pool._allocator.node_stats(nid)["frag_bytes"])
+            for nid in alive}
+    return PlacementPolicy().plan(
+        _catalog(pool, oracle),
+        local_budget_bytes=0,           # everything eligible goes remote
+        n_nodes=len(alive),
+        stripe_bytes=pool.stripe_bytes,
+        node_frag_bytes=frag,
+    )
+
+
+def run(*, smoke: bool = False, bench_json: str | None = None) -> dict:
+    rounds = 800 if smoke else 10_000
+    compact_every = max(rounds // 10, 1)
+    resize_every = max(rounds // 8, 1)
+
+    rng = np.random.default_rng(7)
+    tel = Telemetry()
+    pool = MemoryPool(3, stripe_bytes=STRIPE, replication=1, telemetry=tel)
+    oracle: dict[str, np.ndarray] = {}   # flat numpy ground truth
+    arena_of: dict[str, str] = {}
+    next_id = 0
+    frag_ratios: list[float] = []
+    n_resizes = n_compactions = verified_reads = 0
+    grow_next = True
+
+    def new_object() -> None:
+        nonlocal next_id
+        arena = ARENAS[int(rng.integers(len(ARENAS)))]
+        name = f"{arena}_{next_id}"
+        next_id += 1
+        nbytes = int(rng.integers(MIN_OBJ, MAX_OBJ + 1))
+        data = rng.integers(0, 256, size=nbytes, dtype=np.uint8)
+        pool.alloc(name, data, client=arena)
+        oracle[name] = data.copy()
+        arena_of[name] = arena
+
+    def verify(name: str) -> None:
+        nonlocal verified_reads
+        got, _end = pool.read_object(name)
+        assert np.array_equal(got, oracle[name]), (
+            f"read of {name!r} diverged from the flat-numpy oracle"
+        )
+        verified_reads += 1
+
+    t_wall = time.time()
+    for r in range(1, rounds + 1):
+        live = list(oracle)
+        op = rng.random()
+        if len(live) < MIN_LIVE or (op < 0.35 and len(live) < MAX_LIVE):
+            new_object()
+        elif op < 0.55:
+            name = str(rng.choice(live))
+            pool.free(name)
+            del oracle[name]
+            del arena_of[name]
+        elif op < 0.70:
+            # object resize: free + realloc under the same name with a new
+            # size (pool extents are immutable; resize is the churn driver)
+            name = str(rng.choice(live))
+            arena = arena_of[name]
+            pool.free(name)
+            nbytes = int(rng.integers(MIN_OBJ, MAX_OBJ + 1))
+            data = rng.integers(0, 256, size=nbytes, dtype=np.uint8)
+            pool.alloc(name, data, client=arena)
+            oracle[name] = data.copy()
+        elif op < 0.85:
+            name = str(rng.choice(live))
+            data = rng.integers(0, 256, size=oracle[name].nbytes,
+                                dtype=np.uint8)
+            pool.write(name, data, sync=True)
+            oracle[name] = data.copy()
+        else:
+            verify(str(rng.choice(live)))
+
+        if r % resize_every == 0:
+            # autoscale-style membership churn: grow then shrink, bounded
+            alive = [n.node_id for n in pool.alive_nodes()]
+            if grow_next or len(alive) <= 2:
+                pool.add_nodes(1)
+            else:
+                pool.drain_nodes([max(alive)])
+            grow_next = not grow_next
+            n_resizes += 1
+            pool.check_no_orphans()
+
+        if r % compact_every == 0:
+            plan_before = _steady_state_plan(pool, oracle)
+            stats = pool.compact()
+            n_compactions += 1
+            assert stats["external_frag_after"] <= \
+                stats["external_frag_before"] + 1e-9, (
+                    f"round {r}: compaction increased external frag "
+                    f"{stats['external_frag_before']} -> "
+                    f"{stats['external_frag_after']}"
+                )
+            fs = pool.fragmentation_stats()
+            ratio = (fs["external_frag_bytes"] / fs["live_bytes"]
+                     if fs["live_bytes"] else 0.0)
+            frag_ratios.append(ratio)
+            assert ratio <= FRAG_BOUND, (
+                f"round {r}: external frag {ratio:.3f} of live bytes "
+                f"exceeds the {FRAG_BOUND:.0%} bound"
+            )
+            plan_after = _steady_state_plan(pool, oracle)
+            d = diff_plans(plan_before, plan_after)
+            assert d.is_noop, (
+                f"round {r}: compaction changed the placement plan: "
+                f"{d.summary()}"
+            )
+            pool.check_no_orphans()
+            for name in rng.choice(list(oracle),
+                                   size=min(32, len(oracle)),
+                                   replace=False):
+                verify(str(name))
+
+    # steady state: compact until quiescent, then prove the fixpoint
+    pool.compact()
+    final = pool.compact()
+    assert final["compacted_extents"] == 0 and final["moved_extents"] == 0, (
+        f"steady-state compaction still moved data: {final}"
+    )
+    for name in list(oracle):
+        verify(name)
+    audit = pool.check_no_orphans()
+    wall_s = time.time() - t_wall
+
+    fs = pool.fragmentation_stats()
+    final_ratio = (fs["external_frag_bytes"] / fs["live_bytes"]
+                   if fs["live_bytes"] else 0.0)
+    ops_per_s = rounds / max(wall_s, 1e-9)
+    emit("fig_alloc_churn/churn", wall_s * 1e6,
+         f"rounds={rounds} live={len(oracle)} resizes={n_resizes} "
+         f"compactions={n_compactions} reads_verified={verified_reads}")
+    emit("fig_alloc_churn/frag", fs["external_frag_bytes"],
+         f"final_ratio={final_ratio:.4f} max_ratio={max(frag_ratios):.4f} "
+         f"bound={FRAG_BOUND} internal={fs['internal_frag_bytes']}")
+    emit("fig_alloc_churn/throughput", 1e6 / ops_per_s,
+         f"ops_per_s={ops_per_s:.0f} audit={audit['extent_replicas']}ext")
+
+    payload = {
+        "churn": {
+            "rounds": rounds,
+            "frag_bound": FRAG_BOUND,
+            "max_frag_ratio": max(frag_ratios),
+            "final_frag_ratio": final_ratio,
+            "ops_per_s": ops_per_s,
+            "n_resizes": n_resizes,
+            "n_compactions": n_compactions,
+            "verified_reads": verified_reads,
+            "live_objects": len(oracle),
+            "live_bytes": fs["live_bytes"],
+            "internal_frag_bytes": fs["internal_frag_bytes"],
+            "external_frag_bytes": fs["external_frag_bytes"],
+            "smoke": smoke,
+        },
+        "frag_ratios": frag_ratios,
+        "metrics": tel.snapshot(bench="fig_alloc_churn").to_json(),
+    }
+    save_json("fig_alloc_churn", payload)
+    if bench_json:
+        with open(bench_json, "w") as f:
+            json.dump(payload["churn"], f, indent=1, sort_keys=True)
+            f.write("\n")
+        emit("fig_alloc_churn/bench_json", 0.0, bench_json)
+    return payload
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="shortened churn (CI alloc-churn job)")
+    parser.add_argument("--bench-json", nargs="?", const="BENCH_pr7.json",
+                        default=None, metavar="PATH",
+                        help="write the allocator perf contract to PATH "
+                             "(default: BENCH_pr7.json)")
+    args = parser.parse_args()
+    run(smoke=args.smoke, bench_json=args.bench_json)
+
+
+if __name__ == "__main__":
+    main()

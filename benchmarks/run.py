@@ -14,6 +14,7 @@ and writes structured JSON under benchmarks/results/.
   fig_pipeline — trace-driven prefetch: window x fraction x nodes sweep
   fig_sizing — cost-model-vs-simulator curves + advised local size/workload
   fig_autoscale — online KV autoscaler under a drifting request mix
+  fig_alloc_churn — slab allocator under churn: frag bound + compaction
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
 
 ``--bench-json [PATH]`` runs a fast per-workload baseline (oracle vs legacy
@@ -104,6 +105,7 @@ def main() -> None:
         fig8_threads,
         fig9_dualbuffer,
         fig10_problem_sizes,
+        fig_alloc_churn,
         fig_autoscale,
         fig_pipeline,
         fig_pool_scaling,
@@ -124,6 +126,7 @@ def main() -> None:
         ("fig_pipeline", fig_pipeline),
         ("fig_sizing", fig_sizing),
         ("fig_autoscale", fig_autoscale),
+        ("fig_alloc_churn", fig_alloc_churn),
     ]
     failures = 0
     for name, mod in modules:

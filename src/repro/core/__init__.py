@@ -1,4 +1,10 @@
 """DOLMA core: data-object-level memory tiering."""
+from repro.core.alloc import (
+    DEFAULT_STRIPE_BYTES,
+    SlabAllocator,
+    object_footprint_bytes,
+    size_class_bytes,
+)
 from repro.core.dual_buffer import DolmaRuntime, run_iterative
 from repro.core.fabric import (
     ETHERNET_25G,
@@ -18,7 +24,7 @@ from repro.core.placement import (
     demotion_order,
     diff_plans,
 )
-from repro.core.pool import ExtentLostError, MemoryPool
+from repro.core.pool import ExtentLostError, MemoryPool, OrphanExtentError
 from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.scheduler import ThreadBuffers, TwoLevelScheduler
 from repro.core.telemetry import (
@@ -50,6 +56,7 @@ from repro.core.tiering import (
 )
 
 __all__ = [
+    "DEFAULT_STRIPE_BYTES",
     "DataObject",
     "DolmaRuntime",
     "ETHERNET_25G",
@@ -67,6 +74,7 @@ __all__ = [
     "ObjectCatalog",
     "ObjectKind",
     "ObjectMeta",
+    "OrphanExtentError",
     "PlacementPlan",
     "PlacementPolicy",
     "PlanDiff",
@@ -74,6 +82,7 @@ __all__ = [
     "RollingProfile",
     "SMALL_OBJECT_BYTES",
     "SimClock",
+    "SlabAllocator",
     "Status",
     "Telemetry",
     "ThreadBuffers",
@@ -88,6 +97,8 @@ __all__ = [
     "blocked_remat_scan",
     "demotion_order",
     "diff_plans",
+    "object_footprint_bytes",
+    "size_class_bytes",
     "synthetic_profile",
     "grad_safe_barrier",
     "leaf_sharding",

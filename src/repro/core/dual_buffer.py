@@ -83,6 +83,7 @@ class DolmaRuntime:
         sizing_profile: "Any | None" = None,
         sizing_iters: int = 10,
         telemetry: Telemetry | None = None,
+        client: str | None = None,
     ) -> None:
         # sim_scale: fabric/compute costs are charged at sim_scale x the real
         # array bytes, so small (fast, testable) arrays model paper-scale
@@ -109,6 +110,9 @@ class DolmaRuntime:
         # Belady-from-trace eviction and batched pool I/O
         self.pipeline = pipeline
         self.prefetch_window = max(int(prefetch_window), 1)
+        # pool tenancy: when the remote tier is a shared MemoryPool, this
+        # runtime's allocations land in its own per-client slab arena
+        self.client = client
 
         # observability: spans/counters recorded against the simulated clock
         # (reads only — enabling telemetry never changes a benchmark number)
@@ -284,7 +288,8 @@ class DolmaRuntime:
                     if pooled:
                         # the plan's home node anchors the stripe walk
                         self.store.alloc(name, lo.data,
-                                         home=plan.node_of.get(name))
+                                         home=plan.node_of.get(name),
+                                         client=self.client)
                     else:
                         self.store.alloc(name, lo.data)
                 except MemoryError:

@@ -113,6 +113,10 @@ def diff_plans(old: PlacementPlan, new: PlacementPlan) -> PlanDiff:
     new-and-is-remote means demote. Home-node churn for objects that stay
     remote is reported separately — striped pools rebalance extents
     themselves, so a ``rehome`` is advisory, not a data move.
+
+    The diff keys on tiers and homes only — never on slab geometry — so
+    intra-node allocator activity (slab folding under ``MemoryPool.compact``)
+    between two otherwise-identical slab-aware plans diffs to a no-op.
     """
     old_remote = set(old.remote_names())
     new_remote = set(new.remote_names())
@@ -160,6 +164,8 @@ class PlacementPolicy:
         profile: "object | None" = None,
         degradation_target: float = 0.16,
         sizing_config: "object | None" = None,
+        stripe_bytes: int | None = None,
+        node_frag_bytes: Mapping[int, float] | None = None,
     ) -> PlacementPlan:
         """Demote ranked objects until local usage fits the budget.
 
@@ -174,6 +180,19 @@ class PlacementPolicy:
         smallest one whose predicted degradation meets
         ``degradation_target``; ``sizing_config`` (a ``ModelConfig``) sets
         the fabric/topology the cost model prices against.
+
+        **Slab-aware planning** (``stripe_bytes`` given): each object's
+        per-node load is its slab footprint — full stripes plus the
+        class-rounded tail (:func:`repro.core.alloc.object_footprint_bytes`)
+        — so ``node_load`` prices the bytes the pool's allocator will
+        actually hold, and ``node_frag_bytes`` (measured per-node
+        fragmentation, e.g. ``MemoryPool.fragmentation_stats()``) shrinks
+        each node's effective capacity. Footprints are deterministic in the
+        catalog alone, so replanning around a compaction — which changes
+        fragmentation but neither sizes nor membership — yields an
+        identical plan (and an empty :func:`diff_plans` diff) unless the
+        freed fragmentation newly unblocks a capacity-bound demotion:
+        steady-state compaction moves nothing.
         """
         if local_fraction == "auto" or local_budget_bytes == "auto":
             if profile is None:
@@ -197,6 +216,17 @@ class PlacementPolicy:
                 raise ValueError("pass local_fraction or local_budget_bytes")
             local_budget_bytes = int(peak * local_fraction)
 
+        if stripe_bytes is not None:
+            from repro.core.alloc import object_footprint_bytes
+
+            def footprint(nbytes: int) -> int:
+                return object_footprint_bytes(nbytes,
+                                              stripe_bytes=stripe_bytes)
+        else:
+            def footprint(nbytes: int) -> int:
+                return nbytes
+        frag = dict(node_frag_bytes or {})
+
         tiers: dict[str, Tier] = {o.name: Tier.LOCAL for o in catalog}
         node_of: dict[str, int] = {}
         node_load: dict[int, int] = {i: 0 for i in range(n_nodes)}
@@ -209,12 +239,13 @@ class PlacementPolicy:
             home = min(node_load, key=lambda i: (node_load[i], i))
             if (
                 node_capacity_bytes is not None
-                and node_load[home] + obj.size_bytes > node_capacity_bytes
+                and node_load[home] + footprint(obj.size_bytes)
+                > node_capacity_bytes - frag.get(home, 0)
             ):
                 continue  # no node can take it: stays local
             tiers[obj.name] = Tier.REMOTE
             node_of[obj.name] = home
-            node_load[home] += obj.size_bytes
+            node_load[home] += footprint(obj.size_bytes)
             local_bytes -= obj.size_bytes
 
         remote_bytes = peak - local_bytes

@@ -33,7 +33,14 @@ Mechanisms:
     over the new membership (new replicas are allocated and committed
     before old ones are freed, so every object stays bit-identically
     readable throughout, and migration runs on its own timeline so
-    in-flight reads on the main timeline never block on it).
+    in-flight reads on the main timeline never block on it);
+  * **slab allocation** — *where on a node* each extent replica lives is
+    decided by a :class:`~repro.core.alloc.SlabAllocator`: power-of-two
+    size classes over the stripe, one arena per client (``alloc(...,
+    client=...)``), explicit internal/external fragmentation accounting,
+    and :meth:`compact` — background folding of sparse slabs on its own
+    timeline, reusing the make-before-break discipline (copy charged
+    before the old slot is released) so reads stay bit-identical.
 
 Every transfer both moves real bytes (numpy) and charges the fabric model,
 so pool-backed workloads stay bit-exact against untiered oracles while the
@@ -47,6 +54,11 @@ from typing import Iterable, Mapping
 
 import numpy as np
 
+from repro.core.alloc import (
+    DEFAULT_ARENA,
+    DEFAULT_STRIPE_BYTES,
+    SlabAllocator,
+)
 from repro.core.fabric import (
     FabricModel,
     FabricResource,
@@ -56,7 +68,9 @@ from repro.core.fabric import (
 from repro.core.remote_store import NodeFailure, RemoteStore
 from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
-DEFAULT_STRIPE_BYTES = 1 << 20  # 1 MiB extents (a few RDMA ops each)
+
+class OrphanExtentError(RuntimeError):
+    """A node holds extent keys the directory/allocator don't account for."""
 
 
 class ExtentLostError(RuntimeError):
@@ -102,6 +116,7 @@ class PoolObject:
     nbytes: int
     home: int
     extents: list[Extent]
+    arena: str = DEFAULT_ARENA  # owning client's allocator arena
 
 
 class MemoryPool:
@@ -137,8 +152,13 @@ class MemoryPool:
             self.telemetry.bind_clock(self.clock)
         self.nodes = [self._new_node(i) for i in range(n_nodes)]
         self._directory: dict[str, PoolObject] = {}
+        # intra-node slab/slot bookkeeping for every extent replica; all
+        # node-level placement goes through _place_replica/_release_replica
+        # so the allocator's view never drifts from the nodes' contents
+        self._allocator = SlabAllocator(stripe_bytes=stripe_bytes)
         self._failures: list[dict] = []
         self._resizes: list[dict] = []
+        self._compactions: list[dict] = []
 
     def _new_node(self, node_id: int) -> RemoteStore:
         return RemoteStore(
@@ -167,15 +187,38 @@ class MemoryPool:
         return list(self._directory[name].extents[index].replicas)
 
     # -- allocation ---------------------------------------------------------
-    def alloc(self, name: str, array: np.ndarray, *, home: int | None = None) -> None:
+    def _place_replica(self, node_id: int, key: str, data: np.ndarray,
+                       arena: str) -> None:
+        """Land one extent replica on a node *and* seat it in the slab
+        allocator — the single choke point keeping both views consistent.
+        Raises like ``RemoteStore.alloc`` (capacity stays byte-enforced
+        there); on success the allocator holds exactly one slot for it."""
+        self.nodes[node_id].alloc(key, data)
+        self._allocator.place(node_id, key, data.nbytes, arena=arena)
+
+    def _release_replica(self, node_id: int, key: str) -> None:
+        self.nodes[node_id].free(key)
+        self._allocator.release(node_id, key)
+
+    def alloc(
+        self,
+        name: str,
+        array: np.ndarray,
+        *,
+        home: int | None = None,
+        client: str | None = None,
+    ) -> None:
         """Stripe ``array`` across the pool from its home node.
 
         Extent *e* of an object homed at *h* has its primary on node
         ``(h + e) % N`` and replicas on the following alive nodes — so a
         full-object read touches every node once per stripe-period.
+        ``client`` names the allocator arena the extents are seated in
+        (one per tenant); unattributed allocations share a default arena.
         """
         if name in self._directory:
             raise ValueError(f"pool object {name!r} exists")
+        arena = client if client is not None else DEFAULT_ARENA
         array = np.asarray(array)
         flat = np.ascontiguousarray(array).reshape(-1).view(np.uint8)
         alive = [n.node_id for n in self.alive_nodes()]
@@ -193,16 +236,17 @@ class MemoryPool:
                 ext = Extent(index=idx, offset=off, nbytes=chunk.nbytes,
                              replicas=_striped_replicas(h, idx, alive, k))
                 for node_id in ext.replicas:
-                    self.nodes[node_id].alloc(ext.key(name), chunk)
+                    self._place_replica(node_id, ext.key(name), chunk, arena)
                     placed.append((node_id, ext.key(name)))
                 extents.append(ext)
                 if flat.nbytes == 0:
                     break
         except MemoryError:
             # atomic alloc: a node running out of capacity mid-stripe must
-            # not leak orphan extents the directory doesn't know about
+            # not leak orphan extents the directory doesn't know about —
+            # node objects and allocator slots roll back together
             for node_id, key in placed:
-                self.nodes[node_id].free(key)
+                self._release_replica(node_id, key)
             raise
         self._directory[name] = PoolObject(
             name=name,
@@ -211,7 +255,9 @@ class MemoryPool:
             nbytes=flat.nbytes,
             home=h,
             extents=extents,
+            arena=arena,
         )
+        self._update_frag_gauges()
 
     def free(self, name: str) -> None:
         po = self._directory.pop(name, None)
@@ -219,7 +265,8 @@ class MemoryPool:
             return
         for ext in po.extents:
             for node_id in ext.replicas:
-                self.nodes[node_id].free(ext.key(name))
+                self._release_replica(node_id, ext.key(name))
+        self._update_frag_gauges()
 
     def __contains__(self, name: str) -> bool:
         return name in self._directory
@@ -615,6 +662,7 @@ class MemoryPool:
         """Kill node ``node_id`` at sim-time (its extents are lost)."""
         t = self.clock.now(timeline) if at_us is None else at_us
         self.nodes[node_id].fail(at_us=t)
+        self._allocator.drop_node(node_id)
         self._failures.append({"node": node_id, "at_us": t})
         self.telemetry.instant("node_fail", track=timeline, t_us=t,
                                node=node_id)
@@ -708,7 +756,7 @@ class MemoryPool:
                         read_end = self.clock.now(timeline)
                         from_replica = False
                     try:
-                        target.alloc(key, data)
+                        self._place_replica(target_id, key, data, po.arena)
                     except MemoryError:
                         # target is at capacity: try the next candidate
                         full_targets.add(target_id)
@@ -737,6 +785,7 @@ class MemoryPool:
                                    **stats)
         self.telemetry.count("pool.rebuilt_extents", rebuilt)
         self.telemetry.count("pool.restored_extents", restored)
+        self._update_frag_gauges()
         return stats
 
     # -- elastic capacity: add/drain nodes with background migration ---------
@@ -797,7 +846,7 @@ class MemoryPool:
                         data = src.payload(key)
                     target = self.nodes[tid]
                     try:
-                        target.alloc(key, data)
+                        self._place_replica(tid, key, data, po.arena)
                     except MemoryError:
                         continue  # at capacity: an old replica is kept below
                     qp = target.least_loaded_resource()
@@ -820,7 +869,7 @@ class MemoryPool:
                     retained += 1
                 for nid in cur:
                     if nid not in placed:
-                        self.nodes[nid].free(key)
+                        self._release_replica(nid, key)
                 ext.replicas = placed
         stats = {
             "moved_extents": moved,
@@ -836,6 +885,70 @@ class MemoryPool:
         self.telemetry.count("pool.moved_extents", moved)
         self.telemetry.count("pool.moved_bytes", moved_bytes)
         self.telemetry.count("pool.migration_us", stats["migration_us"])
+        self._update_frag_gauges()
+        return stats
+
+    # -- background compaction (slab folding on its own timeline) ------------
+    def compact(self, *, timeline: str = "compaction",
+                rebalance_after: bool = True) -> dict:
+        """Fold sparse slabs together; reads stay bit-identical throughout.
+
+        For every (node, arena, size-class) bin the allocator plans the
+        minimal set of intra-node extent moves that leaves at most one
+        partial slab (see :meth:`SlabAllocator.plan_compaction`); each move
+        is executed make-before-break — the copy into the new slot is
+        charged (read + write on the node's QP, on the dedicated
+        ``timeline``) *before* the old slot is released — and the extent
+        key, its node, and its bytes never change, so any concurrent read
+        is served identically at every intermediate state.
+
+        With ``rebalance_after`` (default) a :meth:`rebalance` pass then
+        folds any inter-node drift back onto the canonical striped layout,
+        reusing the same make-before-break migration machinery — at steady
+        state both passes move nothing.
+        """
+        t0 = self.clock.now(timeline)
+        before = self._allocator.stats()
+        moves = self._allocator.plan_compaction()
+        end = t0
+        folded_bytes = 0
+        for mv in moves:
+            node = self.nodes[mv.node_id]
+            if not node.alive:
+                continue  # lost the race with a failure: nothing to fold
+            qp = node.least_loaded_resource()
+            _s, r_end = qp.issue("read", mv.nbytes, self.clock.now(timeline))
+            _s2, w_end = qp.issue("write", mv.nbytes, r_end)
+            self.clock.wait_until(timeline, w_end)
+            end = max(end, w_end)
+            self._allocator.apply_move(mv)
+            folded_bytes += mv.nbytes
+        after = self._allocator.stats()
+        stats = {
+            "compacted_extents": len(moves),
+            "compacted_bytes": folded_bytes,
+            "external_frag_before": before["external_frag_bytes"],
+            "external_frag_after": after["external_frag_bytes"],
+            "freed_slab_bytes": before["held_bytes"] - after["held_bytes"],
+            "compaction_us": max(end - t0, 0.0),
+        }
+        if rebalance_after:
+            reb = self.rebalance(timeline=timeline)
+            stats["moved_extents"] = reb["moved_extents"]
+            stats["moved_bytes"] = reb["moved_bytes"]
+        else:
+            stats["moved_extents"] = stats["moved_bytes"] = 0
+        self._compactions.append(stats)
+        self.telemetry.record_span(
+            "compact", track=timeline, begin_us=t0, end_us=max(end, t0),
+            cat="migration", compacted_extents=stats["compacted_extents"],
+            compacted_bytes=folded_bytes,
+            external_frag_after=stats["external_frag_after"],
+        )
+        self.telemetry.count("pool.compactions")
+        self.telemetry.count("pool.compacted_extents", len(moves))
+        self.telemetry.count("pool.compacted_bytes", folded_bytes)
+        self._update_frag_gauges()
         return stats
 
     def _rehome_atomics(self) -> None:
@@ -942,6 +1055,7 @@ class MemoryPool:
         for nid in draining:
             evacuated.update(self.nodes[nid].drain_atomics())
             self.nodes[nid].retire()
+            self._allocator.drop_node(nid)
         for key, val in evacuated.items():
             self._atomic_node(key).adopt_atomics({key: val})
         stats["drained_nodes"] = draining
@@ -976,6 +1090,88 @@ class MemoryPool:
             else:
                 self.alloc(name, data)
 
+    # -- leak audit ----------------------------------------------------------
+    def check_no_orphans(self) -> dict:
+        """Audit node contents against the directory and the allocator.
+
+        Raises :class:`OrphanExtentError` if any alive node holds an extent
+        key the directory doesn't map to it, if a directory replica points
+        at an alive node that lost the bytes, or if the slab allocator's
+        bookkeeping has drifted from the nodes' actual contents (including
+        keys still charged to failed/retired nodes). Returns audit counters
+        when clean — call it after failed mid-stripe allocs, drains, and
+        recovery, where a rollback bug would otherwise leak quietly.
+        """
+        expected: dict[int, set[str]] = {}
+        for name, po in self._directory.items():
+            for ext in po.extents:
+                for nid in ext.replicas:
+                    expected.setdefault(nid, set()).add(ext.key(name))
+        problems: list[str] = []
+        audited = replicas = 0
+        for node in self.nodes:
+            alloc_keys = set(self._allocator.keys_on(node.node_id))
+            if not node.alive:
+                if alloc_keys:
+                    problems.append(
+                        f"allocator still charges dead node {node.node_id} "
+                        f"for {sorted(alloc_keys)[:3]}..."
+                    )
+                continue
+            audited += 1
+            held = set(node.object_names())
+            exp = expected.get(node.node_id, set())
+            replicas += len(held)
+            if held - exp:
+                problems.append(
+                    f"node {node.node_id}: orphan extents outside the "
+                    f"directory: {sorted(held - exp)[:5]}"
+                )
+            if exp - held:
+                problems.append(
+                    f"node {node.node_id}: directory replicas missing from "
+                    f"the node: {sorted(exp - held)[:5]}"
+                )
+            if alloc_keys != held:
+                drift = alloc_keys.symmetric_difference(held)
+                problems.append(
+                    f"node {node.node_id}: allocator/node drift on "
+                    f"{sorted(drift)[:5]}"
+                )
+            for key in held & alloc_keys:
+                if self._allocator.nbytes_of(node.node_id, key) != \
+                        node.nbytes(key):
+                    problems.append(
+                        f"node {node.node_id}: size drift on {key!r}"
+                    )
+        if problems:
+            raise OrphanExtentError("; ".join(problems))
+        return {"nodes_audited": audited, "extent_replicas": replicas,
+                "objects": len(self._directory)}
+
+    # -- fragmentation accounting --------------------------------------------
+    def fragmentation_stats(self) -> dict:
+        """The allocator's pool-wide view plus a per-alive-node average —
+        the quantity effective-capacity pricing subtracts from raw node
+        capacity (`sizing.pool_nodes_needed`)."""
+        s = self._allocator.stats()
+        alive = len(self.alive_nodes())
+        s["frag_bytes_per_node"] = (s["frag_bytes"] / alive) if alive else 0.0
+        s["per_arena"] = self._allocator.arena_stats()
+        return s
+
+    def _update_frag_gauges(self) -> None:
+        if not self.telemetry.enabled:
+            return
+        for node in self.alive_nodes():
+            ns = self._allocator.node_stats(node.node_id)
+            self.telemetry.gauge("pool.slab_occupancy",
+                                 ns["slab_occupancy"], node=node.node_id)
+            self.telemetry.gauge("pool.internal_frag_bytes",
+                                 ns["internal_frag_bytes"], node=node.node_id)
+            self.telemetry.gauge("pool.external_frag_bytes",
+                                 ns["external_frag_bytes"], node=node.node_id)
+
     # -- stats ---------------------------------------------------------------
     def stats(self) -> dict:
         per_node = [n.stats() for n in self.nodes]
@@ -991,7 +1187,9 @@ class MemoryPool:
             "stripe_bytes": self.stripe_bytes,
             "logical_bytes": self.total_bytes(),
             "physical_bytes": self.physical_bytes(),
+            "allocator": self.fragmentation_stats(),
             "failures": list(self._failures),
             "resizes": list(self._resizes),
+            "compactions": list(self._compactions),
             "per_node": per_node,
         }

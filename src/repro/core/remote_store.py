@@ -160,6 +160,11 @@ class RemoteStore:
         with self._lock:
             return self._used_bytes
 
+    def object_names(self) -> list[str]:
+        """Keys resident on this node (the pool's orphan-audit surface)."""
+        with self._lock:
+            return list(self._objects)
+
     def total_bytes(self) -> int:
         with self._lock:
             return sum(o.data.nbytes for o in self._objects.values())

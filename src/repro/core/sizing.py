@@ -38,12 +38,12 @@ from typing import Any
 
 import numpy as np
 
+from repro.core.alloc import DEFAULT_STRIPE_BYTES
 from repro.core.fabric import FabricModel, FabricResource, INFINIBAND_100G
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
 from repro.core.placement import PlacementPlan, PlacementPolicy, demotion_order
 
 DEFAULT_DEGRADATION_TARGET = 0.16  # the paper's headline knee (§6.1)
-DEFAULT_STRIPE_BYTES = 1 << 20
 # model-vs-simulator agreement contract (asserted by tests/test_sizing.py and
 # benchmarks/fig_sizing.py): predictions within this relative error
 MODEL_TOLERANCE = 0.15
@@ -995,6 +995,39 @@ def advise_local_size(
     )
 
 
+def effective_node_capacity(
+    node_capacity_bytes: int, frag_bytes_per_node: float = 0.0
+) -> int:
+    """Raw per-node capacity minus measured allocator fragmentation.
+
+    Fragmentation held in partial slabs (``MemoryPool.fragmentation_stats()
+    ["frag_bytes_per_node"]``) is space a node *charges* but cannot serve —
+    capacity planning that prices raw bytes oscillates on that phantom
+    space (scale down onto it, rediscover it's unusable, scale back up).
+    """
+    return max(int(node_capacity_bytes - frag_bytes_per_node), 1)
+
+
+def pool_nodes_needed(
+    remote_bytes: int,
+    *,
+    replication: int = 1,
+    node_capacity_bytes: int,
+    frag_bytes_per_node: float = 0.0,
+    min_nodes: int = 1,
+    max_nodes: int | None = None,
+) -> int:
+    """Nodes required to hold ``remote_bytes`` (× replication) of working
+    set, priced on *effective* capacity — the advised-budget→node-count
+    mapping the serving autoscaler installs (DESIGN.md §8/§10)."""
+    eff = effective_node_capacity(node_capacity_bytes, frag_bytes_per_node)
+    need = -(-remote_bytes * replication // eff) if remote_bytes else 0
+    need = max(need, min_nodes)
+    if max_nodes is not None:
+        need = min(need, max_nodes)
+    return need
+
+
 __all__ = [
     "CostModel",
     "CurvePoint",
@@ -1008,6 +1041,8 @@ __all__ = [
     "SizingAdvice",
     "WorkloadProfile",
     "advise_local_size",
+    "effective_node_capacity",
+    "pool_nodes_needed",
     "simulate_profile",
     "synthetic_profile",
 ]

@@ -16,6 +16,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.core.alloc import DEFAULT_STRIPE_BYTES
 from repro.core.dual_buffer import DolmaRuntime, run_iterative
 from repro.core.fabric import FabricModel, INFINIBAND_100G
 from repro.core.pool import MemoryPool
@@ -86,10 +87,11 @@ def pooled_runtime(
     *,
     local_fraction: float | str,
     replication: int = 1,
-    stripe_bytes: int = 1 << 20,
+    stripe_bytes: int = DEFAULT_STRIPE_BYTES,
     qps_per_node: int = 1,
     fabric: FabricModel = INFINIBAND_100G,
     telemetry: "Any | None" = None,
+    client: str | None = None,
     **runtime_kwargs: Any,
 ) -> DolmaRuntime:
     """A DolmaRuntime whose remote tier is an ``n_nodes`` memory pool.
@@ -109,7 +111,8 @@ def pooled_runtime(
         telemetry=telemetry,
     )
     return DolmaRuntime(local_fraction=local_fraction, fabric=fabric,
-                        store=pool, telemetry=telemetry, **runtime_kwargs)
+                        store=pool, telemetry=telemetry, client=client,
+                        **runtime_kwargs)
 
 
 def profile_workload(

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.alloc import DEFAULT_STRIPE_BYTES
 from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
 from repro.core.placement import PlacementPolicy, diff_plans
 from repro.core.pool import MemoryPool
@@ -38,6 +39,7 @@ from repro.core.sizing import (
     ObjectProfile,
     RollingProfile,
     advise_local_size,
+    pool_nodes_needed,
     simulate_profile,
 )
 from repro.core.telemetry import NULL_TELEMETRY, Telemetry
@@ -79,7 +81,7 @@ class EngineConfig:
     # this is the *initial* pool size (defaults to autoscale.min_nodes).
     pool_nodes: int = 0
     pool_replication: int = 1
-    pool_stripe_bytes: int = 1 << 20
+    pool_stripe_bytes: int = DEFAULT_STRIPE_BYTES
     autoscale: AutoscaleConfig | None = None
 
 
@@ -137,12 +139,19 @@ class ServingEngine:
             ))
         return catalog
 
+    def _pool_frag_per_node(self) -> float:
+        """Measured per-node allocator fragmentation (phantom space)."""
+        if self.pool is None:
+            return 0.0
+        return self.pool.fragmentation_stats()["frag_bytes_per_node"]
+
     def _decide_cache_placement(self):
         budget = self.ecfg.hbm_budget_bytes or self.catalog.total_bytes
         return PlacementPolicy().plan(
             self.catalog,
             local_budget_bytes=budget,
             n_nodes=max(self._pool_target_nodes, 1),
+            stripe_bytes=self.ecfg.pool_stripe_bytes,
         )
 
     @property
@@ -200,8 +209,11 @@ class ServingEngine:
             if name in self.pool:
                 self.pool.write(name, leaves[name])  # async overflow write
             else:
+                # the engine is one pool tenant: its churn stays in its own
+                # allocator arena (per-client slab isolation)
                 self.pool.alloc(name, leaves[name],
-                                home=self.placement.node_of.get(name))
+                                home=self.placement.node_of.get(name),
+                                client="serving")
         if not initial:
             self.pool.fence(demoted)
 
@@ -296,18 +308,27 @@ class ServingEngine:
                                    config=mcfg)
         catalog = profile.catalog()
 
-        # advised budget -> pool capacity: remote KV bytes over node size
-        # (the demoted set depends only on the budget, not the node count)
+        # advised budget -> pool capacity: remote KV bytes over *effective*
+        # node size — raw capacity minus measured allocator fragmentation,
+        # so the autoscaler never scales down onto phantom space (the
+        # demoted set depends only on the budget, not the node count)
         prelim = PlacementPolicy().plan(
             catalog, local_budget_bytes=advice.advised_budget_bytes,
             n_nodes=max(n_now, 1),
+            stripe_bytes=self.ecfg.pool_stripe_bytes,
         )
         remote_kv = sum(catalog[n].size_bytes for n in prelim.remote_names()
                         if n.startswith("cache"))
+        frag_per_node = self._pool_frag_per_node()
         if remote_kv:
-            need = -(-remote_kv * self.ecfg.pool_replication
-                     // acfg.node_capacity_bytes)
-            target = min(max(need, acfg.min_nodes), acfg.max_nodes)
+            target = pool_nodes_needed(
+                remote_kv,
+                replication=self.ecfg.pool_replication,
+                node_capacity_bytes=acfg.node_capacity_bytes,
+                frag_bytes_per_node=frag_per_node,
+                min_nodes=acfg.min_nodes,
+                max_nodes=acfg.max_nodes,
+            )
         else:
             target = acfg.min_nodes
 
@@ -316,6 +337,7 @@ class ServingEngine:
         new_plan = PlacementPolicy().plan(
             catalog, local_budget_bytes=advice.advised_budget_bytes,
             n_nodes=target,
+            stripe_bytes=self.ecfg.pool_stripe_bytes,
         )
         diff = diff_plans(self.placement, new_plan)
         for name in diff.promote:
@@ -354,6 +376,10 @@ class ServingEngine:
                                 / sim_installed if sim_installed else 0.0),
             "target_nodes": target,
             "remote_kv_bytes": remote_kv,  # planned working-set bytes
+            "frag_bytes_per_node": frag_per_node,
+            "effective_node_capacity_bytes": (
+                acfg.node_capacity_bytes - int(frag_per_node)
+            ),
             "n_alive": (len(self.pool.alive_nodes())
                         if self.pool is not None else 0),
             "pool_logical_bytes": (self.pool.total_bytes()

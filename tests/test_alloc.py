@@ -1,0 +1,383 @@
+"""Allocator v2 (PR 7): size classes, slabs, arenas, compaction, rollback.
+
+Unit coverage for :mod:`repro.core.alloc` plus the pool-level contracts the
+allocator underwrites: atomic alloc rollback (satellite 1), orphan audits
+after drains/recovery, effective-capacity sizing, and property tests over
+random alloc/write/free/compact/resize interleavings — reads stay
+bit-identical, allocator bookkeeping stays consistent with the directory,
+and fragmentation never increases across a compaction pass.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.alloc import (
+    DEFAULT_ARENA,
+    MIN_CLASS_BYTES,
+    SlabAllocator,
+    object_footprint_bytes,
+    size_class_bytes,
+)
+from repro.core.pool import MemoryPool, OrphanExtentError
+from repro.core.sizing import effective_node_capacity, pool_nodes_needed
+
+from tests._hypothesis_compat import given, settings, st
+
+KIB = 1 << 10
+STRIPE = 32 * KIB
+
+
+def _blob(nbytes: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=nbytes, dtype=np.uint8)
+
+
+def _assert_all_readable(pool: MemoryPool, expected: dict) -> None:
+    for name, blob in expected.items():
+        got, _ = pool.read_object(name)
+        assert np.array_equal(got, blob), f"{name} diverged"
+
+
+class TestSizeClasses:
+    def test_power_of_two_rounding(self):
+        assert size_class_bytes(1, stripe_bytes=STRIPE) == MIN_CLASS_BYTES
+        assert size_class_bytes(4096, stripe_bytes=STRIPE) == 4096
+        assert size_class_bytes(4097, stripe_bytes=STRIPE) == 8192
+        assert size_class_bytes(STRIPE, stripe_bytes=STRIPE) == STRIPE
+
+    def test_top_class_is_exactly_the_stripe(self):
+        # even for a non-power-of-two stripe: full stripes pay no internal
+        # fragmentation (a 24K extent in a 24K slot, not a 32K one)
+        odd = 24 * KIB
+        assert size_class_bytes(odd, stripe_bytes=odd) == odd
+        assert size_class_bytes(20 * KIB, stripe_bytes=odd) == odd
+
+    def test_oversized_rejected(self):
+        with pytest.raises(ValueError):
+            size_class_bytes(STRIPE + 1, stripe_bytes=STRIPE)
+
+    def test_footprint(self):
+        # tail-only object: rounds to its class
+        assert object_footprint_bytes(5 * KIB, stripe_bytes=STRIPE) == 8 * KIB
+        # exact stripes: no rounding at all
+        assert object_footprint_bytes(2 * STRIPE, stripe_bytes=STRIPE) \
+            == 2 * STRIPE
+        # stripes + tail: full stripes plus the class-rounded tail
+        assert object_footprint_bytes(STRIPE + 1, stripe_bytes=STRIPE) \
+            == STRIPE + MIN_CLASS_BYTES
+        # empty object still occupies one minimum-class slot
+        assert object_footprint_bytes(0, stripe_bytes=STRIPE) \
+            == MIN_CLASS_BYTES
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 3 * STRIPE))
+    def test_footprint_bounds(self, nbytes):
+        fp = object_footprint_bytes(nbytes, stripe_bytes=STRIPE)
+        assert fp >= nbytes
+        # waste is the tail's class slack: zero for exact stripes, under
+        # one min-class slot for tiny tails, < tail itself otherwise
+        # (the class is the smallest power of two >= the tail)
+        waste = fp - nbytes
+        tail = nbytes % STRIPE
+        if tail == 0:
+            assert waste == 0
+        else:
+            assert waste < max(MIN_CLASS_BYTES, tail)
+        assert waste < STRIPE
+
+
+class TestSlabAllocator:
+    def test_place_release_roundtrip(self):
+        a = SlabAllocator(stripe_bytes=STRIPE)
+        a.place(0, "x#e0", 5 * KIB)
+        assert a.has(0, "x#e0")
+        assert a.nbytes_of(0, "x#e0") == 5 * KIB
+        assert a.arena_of(0, "x#e0") == DEFAULT_ARENA
+        s = a.stats()
+        assert s["live_bytes"] == 5 * KIB
+        assert s["held_bytes"] == STRIPE          # one carved slab
+        assert s["internal_frag_bytes"] == 3 * KIB  # 5K in an 8K slot
+        a.release(0, "x#e0")
+        assert not a.has(0, "x#e0")
+        assert a.stats()["held_bytes"] == 0        # emptied slab returned
+
+    def test_duplicate_place_rejected_and_release_tolerant(self):
+        a = SlabAllocator(stripe_bytes=STRIPE)
+        a.place(0, "x#e0", KIB)
+        with pytest.raises(ValueError):
+            a.place(0, "x#e0", KIB)
+        a.release(0, "never-placed")               # no-op, like the store
+        a.release(3, "x#e0")                       # wrong node: no-op too
+        assert a.has(0, "x#e0")
+
+    def test_prefers_fullest_partial_slab(self):
+        a = SlabAllocator(stripe_bytes=STRIPE)     # 8 slots per 4K slab
+        for i in range(16):                        # two full slabs
+            a.place(0, f"k{i}#e0", 4 * KIB)
+        # empty slab 0 down to 1 slot, slab 1 down to 7
+        for i in range(7):
+            a.release(0, f"k{i}#e0")
+        a.release(0, "k8#e0")
+        slabs = {s.slab_id: s.used_slots for s in a.slabs_on(0)}
+        fullest = max(slabs, key=lambda sid: slabs[sid])
+        a.place(0, "new#e0", 4 * KIB)
+        slabs2 = {s.slab_id: s.used_slots for s in a.slabs_on(0)}
+        assert slabs2[fullest] == slabs[fullest] + 1
+
+    def test_arenas_never_share_slabs(self):
+        a = SlabAllocator(stripe_bytes=STRIPE)
+        a.place(0, "h#e0", 4 * KIB, arena="hpc")
+        a.place(0, "s#e0", 4 * KIB, arena="serving")
+        for slab in a.slabs_on(0):
+            arenas = {a.arena_of(0, k) for k in slab.slots.values()}
+            assert arenas == {slab.arena}
+        per = a.arena_stats()
+        assert per["hpc"]["live_bytes"] == 4 * KIB
+        assert per["serving"]["live_bytes"] == 4 * KIB
+        # two slabs carved even though one could hold both extents
+        assert a.stats()["n_slabs"] == 2
+
+    def test_compaction_folds_to_one_partial_slab(self):
+        a = SlabAllocator(stripe_bytes=STRIPE)     # 8 slots per 4K slab
+        for i in range(32):
+            a.place(0, f"k{i}#e0", 4 * KIB)
+        for i in range(0, 32, 2):                  # shoot holes in every slab
+            a.release(0, f"k{i}#e0")
+        before = a.stats()
+        moves = a.plan_compaction()
+        for mv in moves:
+            a.apply_move(mv)
+        after = a.stats()
+        assert after["n_partial_slabs"] <= 1
+        assert after["external_frag_bytes"] <= before["external_frag_bytes"]
+        assert after["live_bytes"] == before["live_bytes"]
+        assert a.plan_compaction() == []           # fixpoint
+
+    def test_stale_move_rejected(self):
+        a = SlabAllocator(stripe_bytes=STRIPE)
+        for i in range(16):
+            a.place(0, f"k{i}#e0", 4 * KIB)
+        for i in range(0, 16, 2):
+            a.release(0, f"k{i}#e0")
+        moves = a.plan_compaction()
+        assert moves
+        for mv in moves:
+            a.apply_move(mv)
+        with pytest.raises(ValueError):
+            a.apply_move(moves[0])                 # already committed
+
+
+class TestAllocRollback:
+    """Satellite 1: a failed mid-stripe alloc must leak nothing."""
+
+    def test_mid_stripe_memoryerror_rolls_back_everything(self):
+        pool = MemoryPool(1, stripe_bytes=8 * KIB,
+                          node_capacity_bytes=24 * KIB)
+        with pytest.raises(MemoryError):
+            pool.alloc("big", _blob(40 * KIB, seed=1))  # dies at stripe 4
+        assert "big" not in pool
+        assert pool.physical_bytes() == 0
+        assert pool._allocator.stats()["n_extents"] == 0
+        assert pool._allocator.stats()["held_bytes"] == 0
+        pool.check_no_orphans()
+        # the pool is fully usable afterwards
+        blob = _blob(16 * KIB, seed=2)
+        pool.alloc("fits", blob)
+        _assert_all_readable(pool, {"fits": blob})
+        pool.check_no_orphans()
+
+    def test_partial_node_failure_rollback_across_nodes(self):
+        # node 1 fills first; extents already landed on node 0 roll back
+        pool = MemoryPool(2, stripe_bytes=4 * KIB, replication=2,
+                          node_capacity_bytes=8 * KIB)
+        with pytest.raises(MemoryError):
+            pool.alloc("wide", _blob(12 * KIB, seed=3))
+        assert pool.physical_bytes() == 0
+        pool.check_no_orphans()
+
+
+class TestOrphanAudit:
+    def test_clean_after_drain_and_recover(self):
+        pool = MemoryPool(3, stripe_bytes=4 * KIB, replication=2)
+        expected = {}
+        for i in range(5):
+            blob = _blob((i + 1) * 3 * KIB, seed=10 + i)
+            pool.alloc(f"o{i}", blob)
+            expected[f"o{i}"] = blob
+        pool.check_no_orphans()
+        pool.add_nodes(1)
+        pool.check_no_orphans()
+        pool.drain_nodes([1])
+        pool.check_no_orphans()
+        pool.fail_node(0)
+        pool.recover()
+        pool.check_no_orphans()
+        _assert_all_readable(pool, expected)
+
+    def test_detects_node_orphan(self):
+        pool = MemoryPool(2, stripe_bytes=4 * KIB)
+        pool.alloc("x", _blob(6 * KIB, seed=1))
+        # bypass the pool: an extent lands on a node behind its back
+        pool.nodes[0].alloc("ghost#e0", _blob(KIB, seed=2))
+        with pytest.raises(OrphanExtentError, match="orphan|drift"):
+            pool.check_no_orphans()
+
+    def test_detects_allocator_drift(self):
+        pool = MemoryPool(2, stripe_bytes=4 * KIB)
+        pool.alloc("x", _blob(6 * KIB, seed=1))
+        pool._allocator.place(0, "phantom#e0", KIB)
+        with pytest.raises(OrphanExtentError, match="drift"):
+            pool.check_no_orphans()
+
+
+class TestPoolCompaction:
+    def test_compaction_preserves_reads_and_reduces_frag(self):
+        pool = MemoryPool(2, stripe_bytes=STRIPE)
+        expected = {}
+        for i in range(24):
+            blob = _blob(4 * KIB, seed=i)
+            pool.alloc(f"o{i}", blob)
+            expected[f"o{i}"] = blob
+        for i in range(0, 24, 2):                  # fragment the slabs
+            pool.free(f"o{i}")
+            del expected[f"o{i}"]
+        before = pool.fragmentation_stats()
+        stats = pool.compact()
+        after = pool.fragmentation_stats()
+        assert after["external_frag_bytes"] <= before["external_frag_bytes"]
+        assert after["live_bytes"] == before["live_bytes"]
+        assert stats["compaction_us"] >= 0.0
+        _assert_all_readable(pool, expected)
+        pool.check_no_orphans()
+        # steady state: a second pass moves nothing
+        again = pool.compact()
+        assert again["compacted_extents"] == 0
+        assert again["moved_extents"] == 0
+
+    def test_compaction_is_charged_on_its_own_timeline(self):
+        pool = MemoryPool(2, stripe_bytes=STRIPE)
+        for i in range(16):
+            pool.alloc(f"o{i}", _blob(4 * KIB, seed=i))
+        for i in range(0, 16, 2):
+            pool.free(f"o{i}")
+        t_main = pool.clock.now("main")
+        stats = pool.compact()
+        assert stats["compacted_extents"] > 0
+        assert pool.clock.now("main") == t_main    # reads don't pay for it
+        assert pool.clock.now("compaction") > 0.0
+
+
+class TestEffectiveCapacitySizing:
+    def test_effective_capacity_floors_at_one(self):
+        assert effective_node_capacity(10 * KIB) == 10 * KIB
+        assert effective_node_capacity(10 * KIB, 4 * KIB) == 6 * KIB
+        assert effective_node_capacity(10 * KIB, 100 * KIB) == 1
+
+    def test_pool_nodes_needed(self):
+        cap = 16 * KIB
+        assert pool_nodes_needed(0, node_capacity_bytes=cap) == 1
+        assert pool_nodes_needed(cap, node_capacity_bytes=cap) == 1
+        assert pool_nodes_needed(cap + 1, node_capacity_bytes=cap) == 2
+        assert pool_nodes_needed(3 * cap, replication=2,
+                                 node_capacity_bytes=cap) == 6
+        # fragmentation shrinks effective capacity -> more nodes
+        assert pool_nodes_needed(3 * cap, node_capacity_bytes=cap,
+                                 frag_bytes_per_node=cap / 2) == 6
+        # clamps
+        assert pool_nodes_needed(100 * cap, node_capacity_bytes=cap,
+                                 max_nodes=4) == 4
+        assert pool_nodes_needed(1, node_capacity_bytes=cap,
+                                 min_nodes=3) == 3
+
+
+class TestAllocatorProperties:
+    """Random interleavings (tentpole property battery): bookkeeping and
+    data integrity hold at every step, not just at quiescence."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.data())
+    def test_random_churn_keeps_reads_bit_identical(self, data):
+        pool = MemoryPool(data.draw(st.integers(1, 3)),
+                          stripe_bytes=8 * KIB,
+                          replication=data.draw(st.integers(1, 2)))
+        expected: dict[str, np.ndarray] = {}
+        arena_of: dict[str, str] = {}
+        seq = 0
+        for _ in range(data.draw(st.integers(6, 14))):
+            op = data.draw(st.sampled_from(
+                ["alloc", "free", "write", "resize_obj", "compact",
+                 "add_nodes", "drain"]))
+            if op == "alloc":
+                name = f"obj{seq}"
+                seq += 1
+                arena = data.draw(st.sampled_from(["hpc", "serving"]))
+                blob = _blob(data.draw(st.integers(1, 40)) * KIB, seed=seq)
+                pool.alloc(name, blob, client=arena)
+                expected[name] = blob
+                arena_of[name] = arena
+            elif op == "free" and expected:
+                name = data.draw(st.sampled_from(sorted(expected)))
+                pool.free(name)
+                del expected[name]
+                del arena_of[name]
+            elif op == "write" and expected:
+                name = data.draw(st.sampled_from(sorted(expected)))
+                seq += 1
+                blob = _blob(expected[name].nbytes, seed=1000 + seq)
+                pool.write(name, blob, sync=True)
+                expected[name] = blob
+            elif op == "resize_obj" and expected:
+                name = data.draw(st.sampled_from(sorted(expected)))
+                seq += 1
+                pool.free(name)
+                blob = _blob(data.draw(st.integers(1, 40)) * KIB,
+                             seed=2000 + seq)
+                pool.alloc(name, blob, client=arena_of[name])
+                expected[name] = blob
+            elif op == "compact":
+                before = pool.fragmentation_stats()["external_frag_bytes"]
+                pool.compact()
+                after = pool.fragmentation_stats()["external_frag_bytes"]
+                assert after <= before + 1e-9
+            elif op == "add_nodes":
+                if len(pool.alive_nodes()) < 5:
+                    pool.add_nodes(1)
+            elif op == "drain":
+                alive = [n.node_id for n in pool.alive_nodes()]
+                if len(alive) > 1:
+                    pool.drain_nodes([data.draw(st.sampled_from(alive))])
+            _assert_all_readable(pool, expected)
+            pool.check_no_orphans()
+            self._assert_allocator_consistent(pool, arena_of)
+
+    @staticmethod
+    def _assert_allocator_consistent(pool, arena_of):
+        # allocator extent count == directory replica count
+        dir_replicas = sum(
+            len(ext.replicas)
+            for po in pool._directory.values()
+            for ext in po.extents
+        )
+        s = pool._allocator.stats()
+        assert s["n_extents"] == dir_replicas
+        # every slab is single-arena and matches the owning object's tenant
+        for node in pool.alive_nodes():
+            for slab in pool._allocator.slabs_on(node.node_id):
+                for key in slab.slots.values():
+                    name = key.rsplit("#e", 1)[0]
+                    assert slab.arena == arena_of.get(
+                        name, slab.arena
+                    ), f"{key} in arena {slab.arena}"
+                assert 0 < slab.used_slots <= slab.n_slots
+        # per-arena live bytes reconcile with the directory
+        per = pool._allocator.arena_stats()
+        for arena in set(arena_of.values()):
+            dir_bytes = sum(
+                ext.nbytes * len(ext.replicas)
+                for name, po in pool._directory.items()
+                for ext in po.extents
+                if arena_of[name] == arena
+            )
+            got = per.get(arena, {"live_bytes": 0})["live_bytes"]
+            assert got == dir_bytes, f"arena {arena}: {got} != {dir_bytes}"
