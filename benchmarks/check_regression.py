@@ -19,14 +19,23 @@ Three committed perf contracts are enforced:
   deterministic), and that churn throughput (``ops_per_s``, real
   wall-clock) has not dropped more than ``--churn-tolerance`` (default
   50% — wall time is the one noisy metric here).
+* ``BENCH_pr8.json`` — the measured-overlap contract
+  (``benchmarks/fig_measured_overlap.py --bench-json``). The gate checks
+  that outputs stayed bit-identical to the untiered oracle, that the
+  matmul chain's wall-clock prefetch speedup meets the *committed floor*
+  (absolute, not relative — wall clock on shared runners is too noisy for
+  a tight relative check), and that every configuration's calibrated
+  simulator prediction error stays under the committed bound.
 
-CI runs all three in the ``bench-regression`` job; locally the same way:
+CI runs all four in the ``bench-regression`` job; locally the same way:
 
     PYTHONPATH=src python -m benchmarks.run --bench-json /tmp/bench.json
     PYTHONPATH=src python -m benchmarks.fig_autoscale --bench-json /tmp/pr5.json
     PYTHONPATH=src python -m benchmarks.fig_alloc_churn --bench-json /tmp/pr7.json
+    PYTHONPATH=src python -m benchmarks.fig_measured_overlap --bench-json /tmp/pr8.json
     python -m benchmarks.check_regression --current /tmp/bench.json \\
-        --pr5-current /tmp/pr5.json --pr7-current /tmp/pr7.json
+        --pr5-current /tmp/pr5.json --pr7-current /tmp/pr7.json \\
+        --pr8-current /tmp/pr8.json
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ import sys
 DEFAULT_BASELINE = "BENCH_pr3.json"
 DEFAULT_PR5_BASELINE = "BENCH_pr5.json"
 DEFAULT_PR7_BASELINE = "BENCH_pr7.json"
+DEFAULT_PR8_BASELINE = "BENCH_pr8.json"
 DEFAULT_TOLERANCE = 0.10
 DEFAULT_CHURN_TOLERANCE = 0.50
 METRIC = "pipeline_speedup"
@@ -147,6 +157,48 @@ def compare_churn(baseline: dict, current: dict, tolerance: float) -> list[str]:
     return problems
 
 
+def compare_overlap(baseline: dict, current: dict) -> list[str]:
+    """Gate the measured-overlap contract (empty = pass).
+
+    Bit-identity is a hard invariant; the speedup floor and the simulator
+    error bound are the *committed* values from the baseline (absolute
+    thresholds — prefetch-on/off runs share a process and pacing, so the
+    ratio is far more stable than any single wall-clock number, but a
+    relative gate on it would still chase runner noise).
+    """
+    problems: list[str] = []
+    for key in ("bit_identical", "overlap_speedup", "speedup_floor",
+                "max_sim_error", "sim_error_bound", "chains"):
+        if key not in baseline:
+            problems.append(f"overlap baseline missing {key!r}")
+        if key not in current:
+            problems.append(f"overlap current run missing {key!r}")
+    if problems:
+        return problems
+    if current["bit_identical"] is not True:
+        problems.append("overlap: streamed outputs no longer bit-identical "
+                        "to the untiered oracle")
+    floor = baseline["speedup_floor"]
+    if current["overlap_speedup"] < floor:
+        problems.append(
+            f"overlap: matmul prefetch speedup "
+            f"{current['overlap_speedup']:.2f}x < committed floor {floor}x"
+        )
+    bound = baseline["sim_error_bound"]
+    for chain, row in current["chains"].items():
+        for leg, stats in row.get("legs", {}).items():
+            err = stats.get("sim_error", float("nan"))
+            if not (err <= bound):
+                problems.append(
+                    f"overlap: {chain}/{leg} simulator error {err:.1%} "
+                    f"exceeds committed bound {bound:.0%}"
+                )
+    missing = sorted(set(baseline["chains"]) - set(current["chains"]))
+    if missing:
+        problems.append(f"overlap: chains missing from current run: {missing}")
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -178,6 +230,16 @@ def main(argv: list[str] | None = None) -> int:
         help="fresh fig_alloc_churn --bench-json output to check",
     )
     parser.add_argument(
+        "--pr8-baseline",
+        default=DEFAULT_PR8_BASELINE,
+        help=f"committed measured-overlap baseline (default {DEFAULT_PR8_BASELINE})",
+    )
+    parser.add_argument(
+        "--pr8-current",
+        default=None,
+        help="fresh fig_measured_overlap --bench-json output to check",
+    )
+    parser.add_argument(
         "--tolerance",
         type=float,
         default=DEFAULT_TOLERANCE,
@@ -191,8 +253,10 @@ def main(argv: list[str] | None = None) -> int:
         "wall-clock is noisy on shared CI runners)",
     )
     args = parser.parse_args(argv)
-    if args.current is None and args.pr5_current is None and args.pr7_current is None:
-        parser.error("pass --current, --pr5-current, and/or --pr7-current")
+    if (args.current is None and args.pr5_current is None
+            and args.pr7_current is None and args.pr8_current is None):
+        parser.error("pass --current, --pr5-current, --pr7-current, "
+                     "and/or --pr8-current")
 
     problems: list[str] = []
     n_checked = 0
@@ -236,6 +300,21 @@ def main(argv: list[str] | None = None) -> int:
             f"{pr7_current.get('ops_per_s', float('nan')):.0f},"
             f"max_frag={pr7_current.get('max_frag_ratio', float('nan')):.4f} "
             f"bound={pr7_baseline.get('frag_bound')}"
+        )
+
+    if args.pr8_current is not None:
+        with open(args.pr8_baseline) as f:
+            pr8_baseline = json.load(f)
+        with open(args.pr8_current) as f:
+            pr8_current = json.load(f)
+        problems += compare_overlap(pr8_baseline, pr8_current)
+        n_checked += 1
+        print(
+            f"check_regression/measured_overlap,"
+            f"{pr8_current.get('overlap_speedup', float('nan')):.2f},"
+            f"floor={pr8_baseline.get('speedup_floor')} "
+            f"max_err={pr8_current.get('max_sim_error', float('nan')):.3f} "
+            f"bound={pr8_baseline.get('sim_error_bound')}"
         )
 
     if problems:

@@ -15,6 +15,7 @@ and writes structured JSON under benchmarks/results/.
   fig_sizing — cost-model-vs-simulator curves + advised local size/workload
   fig_autoscale — online KV autoscaler under a drifting request mix
   fig_alloc_churn — slab allocator under churn: frag bound + compaction
+  fig_measured_overlap — wall-clock Pallas streaming vs calibrated simulator
   roofline — per-(arch x shape x mesh) terms from the dry-run artifacts
 
 ``--bench-json [PATH]`` runs a fast per-workload baseline (oracle vs legacy
@@ -107,6 +108,7 @@ def main() -> None:
         fig10_problem_sizes,
         fig_alloc_churn,
         fig_autoscale,
+        fig_measured_overlap,
         fig_pipeline,
         fig_pool_scaling,
         fig_sizing,
@@ -127,6 +129,7 @@ def main() -> None:
         ("fig_sizing", fig_sizing),
         ("fig_autoscale", fig_autoscale),
         ("fig_alloc_churn", fig_alloc_churn),
+        ("fig_measured_overlap", fig_measured_overlap),
     ]
     failures = 0
     for name, mod in modules:

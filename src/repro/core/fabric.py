@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+from typing import Iterable
 
 from repro.core.telemetry import NULL_TELEMETRY, Telemetry
 
@@ -106,6 +107,93 @@ class FabricModel:
         bytes_per_us = gbps * 1e3  # GB/s == bytes/ns == 1e3 bytes/us
         n_ops = max(1, -(-size_bytes // self.max_op_bytes))
         return n_ops * base_us + size_bytes / bytes_per_us
+
+    def scaled(self, factor: float) -> "FabricModel":
+        """A model whose every op takes ``factor`` x as long.
+
+        time' = factor * (base + bytes/bw) = (factor*base) + bytes/(bw/factor)
+        — used to price a throttled emulation (wall-clock pacing at a
+        fraction of the modeled fabric speed) without touching the anchors.
+        """
+        if not (factor > 0.0):
+            raise ValueError(f"scaled(): factor must be > 0, got {factor!r}")
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}-x{factor:g}",
+            read_base_us=self.read_base_us * factor,
+            read_gbps=self.read_gbps / factor,
+            write_base_us=self.write_base_us * factor,
+            write_gbps=self.write_gbps / factor,
+            atomic_us=self.atomic_us * factor,
+            read_line_gbps=(self.read_line_gbps / factor
+                            if self.read_line_gbps else 0.0),
+        )
+
+
+def fit_fabric_model(
+    measurements: "Iterable[tuple[str, int, float]]",
+    *,
+    base: FabricModel,
+    name: str | None = None,
+) -> FabricModel:
+    """Fit base-cost/bandwidth parameters from wall-clock measurements.
+
+    ``measurements`` is an iterable of ``(kind, nbytes, us)`` samples from
+    the real streaming path (kind: ``"read"`` | ``"write"``). Each kind with
+    at least two distinct sizes gets a least-squares fit of the affine cost
+    model ``us = base_us + nbytes / (gbps * 1e3)``; kinds without enough
+    samples keep ``base``'s parameters. The fitted base is clamped to >= 0
+    (measurement noise can produce a slightly negative intercept; a negative
+    base would poison every later prediction), in which case the bandwidth
+    is refit through the sample mean. The read fit also becomes
+    ``read_line_gbps``: the measured path is fully posted, so the
+    single-op and pipelined asymptote rates coincide by construction.
+    """
+    samples: dict[str, list[tuple[int, float]]] = {"read": [], "write": []}
+    for kind, nbytes, us in measurements:
+        if kind not in samples:
+            raise ValueError(f"fit_fabric_model: unknown op kind {kind!r}")
+        if nbytes <= 0 or not (us >= 0.0):
+            raise ValueError(
+                f"fit_fabric_model: bad sample ({kind!r}, {nbytes}, {us})"
+            )
+        samples[kind].append((int(nbytes), float(us)))
+
+    fitted: dict[str, tuple[float, float]] = {}  # kind -> (base_us, gbps)
+    for kind, pts in samples.items():
+        if len({n for n, _ in pts}) < 2:
+            continue
+        xs = [float(n) for n, _ in pts]
+        ys = [us for _, us in pts]
+        n = len(xs)
+        mx, my = sum(xs) / n, sum(ys) / n
+        sxx = sum((x - mx) ** 2 for x in xs)
+        sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+        slope = sxy / sxx  # us per byte
+        intercept = my - slope * mx
+        if intercept < 0.0:
+            intercept = 0.0
+            slope = my / mx  # refit through the mean with base pinned at 0
+        if slope <= 0.0:
+            raise ValueError(
+                f"fit_fabric_model: non-positive {kind} bandwidth fit "
+                f"(slope {slope:.3g} us/byte) — sweep sizes too narrow?"
+            )
+        fitted[kind] = (intercept, 1.0 / (slope * 1e3))
+
+    read_base, read_gbps = fitted.get("read", (base.read_base_us, base.read_gbps))
+    write_base, write_gbps = fitted.get(
+        "write", (base.write_base_us, base.write_gbps)
+    )
+    return dataclasses.replace(
+        base,
+        name=name or f"{base.name}-calibrated",
+        read_base_us=read_base,
+        read_gbps=read_gbps,
+        read_line_gbps=read_gbps if "read" in fitted else base.read_line_gbps,
+        write_base_us=write_base,
+        write_gbps=write_gbps,
+    )
 
 
 def _calibrated(name, *, read_anchor, write_anchor, read_base_us, write_base_us,
@@ -247,6 +335,25 @@ class FabricResource:
         """Sim-time this QP drains — the congestion signal routing reads."""
         with self._lock:
             return self._free_at
+
+    def calibrate(
+        self,
+        measurements: Iterable[tuple[str, int, float]],
+        *,
+        name: str | None = None,
+    ) -> FabricModel:
+        """Refit this resource's cost model from real-path measurements.
+
+        ``measurements`` come from a microbenchmark sweep of the measured
+        streaming executor (:class:`repro.core.exec.HostFetchEngine`
+        collects them as ``(kind, nbytes, us)`` wall-clock samples). The
+        fitted model (:func:`fit_fabric_model`) replaces :attr:`model` in
+        place, so every op this QP subsequently prices — and every simulator
+        prediction issued through it — uses the calibrated parameters.
+        Returns the new model.
+        """
+        self.model = fit_fabric_model(measurements, base=self.model, name=name)
+        return self.model
 
     def issue(self, kind: str, size_bytes: int, issue_time_us: float) -> tuple[float, float]:
         """Issue an op at ``issue_time_us``; returns (start, completion) times."""

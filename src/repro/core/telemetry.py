@@ -35,6 +35,7 @@ import contextlib
 import dataclasses
 import json
 import threading
+import time
 from typing import Any, Iterator
 
 # span categories (the event taxonomy, DESIGN.md §9):
@@ -163,6 +164,10 @@ class Telemetry:
         self.gauges: dict[str, float] = {}
         self.dropped_events = 0
         self._lock = threading.Lock()
+        # wall-clock origin for measured (non-simulated) tracks: set lazily
+        # on the first wall reading so wall tracks and simulated tracks both
+        # start near t=0 and render side by side in one Perfetto view
+        self._wall_origin: float | None = None
 
     def bind_clock(self, clock: Any) -> None:
         """Attach a clock after construction (first owner wins)."""
@@ -202,6 +207,33 @@ class Telemetry:
         finally:
             self.record_span(name, track=timeline, begin_us=t0,
                              end_us=self.clock.now(timeline), cat=cat, **args)
+
+    def wall_now_us(self) -> float:
+        """Wall-clock µs since this instance's first wall reading.
+
+        The measured-overlap executor records real fetch/compute spans with
+        these timestamps; the shared origin keeps them comparable with the
+        simulated tracks (both start near 0) in one exported trace.
+        """
+        now = time.perf_counter()
+        with self._lock:
+            if self._wall_origin is None:
+                self._wall_origin = now
+            return (now - self._wall_origin) * 1e6
+
+    @contextlib.contextmanager
+    def wall_span(self, name: str, *, track: str, cat: str = "span",
+                  **args: Any) -> Iterator[None]:
+        """Span over a ``with`` body measured on the real (wall) clock."""
+        if not self.enabled:
+            yield
+            return
+        t0 = self.wall_now_us()
+        try:
+            yield
+        finally:
+            self.record_span(name, track=track, begin_us=t0,
+                             end_us=self.wall_now_us(), cat=cat, **args)
 
     def instant(self, name: str, *, track: str, t_us: float | None = None,
                 timeline: str | None = None, **args: Any) -> None:
@@ -274,6 +306,7 @@ class Telemetry:
             self.counters.clear()
             self.gauges.clear()
             self.dropped_events = 0
+            self._wall_origin = None
 
     # -- exporters ---------------------------------------------------------
     def snapshot(self, **meta: Any) -> MetricsSnapshot:

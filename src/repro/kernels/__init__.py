@@ -1,3 +1,47 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels + the backend auto-detection the whole package shares.
+
+Every kernel in this package has two execution modes: compiled Pallas (TPU
+Mosaic) and ``interpret=True`` (the kernel body runs as traced jax ops, so
+the same code validates on CPU CI hosts). :func:`kernel_backend` picks the
+right one for the current platform — compiled on TPU, interpret elsewhere —
+and can be forced either way with the ``REPRO_KERNEL_BACKEND`` environment
+variable (``pallas`` | ``interpret`` | ``auto``). All three kernels
+(``streaming_matmul``, ``flash_attention``, ``ssd_scan``) and the tests
+resolve their ``interpret=None`` default through :func:`resolve_interpret`,
+so there is exactly one place where the platform decision lives.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+#: Environment override for the kernel execution mode.
+BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+
+_VALID_BACKENDS = ("auto", "pallas", "interpret")
+
+
+def kernel_backend() -> str:
+    """``"pallas"`` (compiled Mosaic) or ``"interpret"``.
+
+    Resolution order: the ``REPRO_KERNEL_BACKEND`` env var if set (``auto``
+    defers), else compiled Pallas exactly when the default jax device is a
+    TPU. Raises :class:`ValueError` for an unknown override value so typos
+    fail loudly instead of silently falling back to a 100x slower mode.
+    """
+    choice = os.environ.get(BACKEND_ENV, "auto").strip().lower()
+    if choice not in _VALID_BACKENDS:
+        raise ValueError(
+            f"{BACKEND_ENV}={choice!r}: expected one of {_VALID_BACKENDS}"
+        )
+    if choice != "auto":
+        return choice
+    return "pallas" if jax.devices()[0].platform == "tpu" else "interpret"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Map a kernel's ``interpret`` argument (``None`` = auto) to a bool."""
+    if interpret is None:
+        return kernel_backend() == "interpret"
+    return bool(interpret)

@@ -10,6 +10,12 @@ the compiler instead of hand-rolled DMA (contrast: streaming_matmul.py).
 Causal masking is exact per tile; fully-masked tiles are skipped with
 pl.when (the diagonal-skip the jnp fallback approximates with strips).
 Supports GQA (KV-head index map), sliding windows, and MLA's distinct v dim.
+
+Differentiation: a custom VJP. The forward output comes from the kernel; the
+backward pass recomputes attention through the blocked jnp flash
+(``repro.models.flash``), which carries its own recompute-based VJP — so
+gradients keep the flash memory profile (no (Sq, Sk) score materialization)
+and run on every backend, at the cost of one jnp recompute of the forward.
 """
 from __future__ import annotations
 
@@ -20,6 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
+from repro.kernels.streaming_matmul import _validate_tiles
 
 NEG_INF = -0.7 * float(np.finfo(np.float32).max)
 
@@ -84,25 +93,21 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     static_argnames=("causal", "window", "scale", "block_q", "block_k",
                      "interpret"),
 )
-def flash_attention_tpu(
+def _flash_call(
     q: jax.Array,    # (B, H, Sq, D)
     k: jax.Array,    # (B, KV, Sk, D)
     v: jax.Array,    # (B, KV, Sk, Dv)
     *,
-    causal: bool = True,
-    window: int | None = None,
-    scale: float | None = None,
-    block_q: int = 512,
-    block_k: int = 512,
-    interpret: bool = False,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
 ) -> jax.Array:
     B, H, Sq, D = q.shape
     KV, Sk, Dv = k.shape[1], k.shape[2], v.shape[3]
     G = H // KV
-    scale = scale if scale is not None else 1.0 / np.sqrt(D)
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Sk)
-    assert Sq % block_q == 0 and Sk % block_k == 0
     n_kb = Sk // block_k
 
     grid = (B, H, Sq // block_q, n_kb)
@@ -130,3 +135,85 @@ def flash_attention_tpu(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_vjp(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    return _flash_call(q, k, v, causal=causal, window=window, scale=scale,
+                       block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    out = _flash_call(q, k, v, causal=causal, window=window, scale=scale,
+                      block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, scale, block_q, block_k, interpret, res, g):
+    from repro.models.flash import flash_attention as jnp_flash
+
+    q, k, v = res
+
+    def recompute(qt, kt, vt):
+        # the blocked jnp flash expects (B, S, H, D); its own custom VJP
+        # recomputes score tiles, so no (Sq, Sk) score matrix materializes
+        o = jnp_flash(
+            qt.transpose(0, 2, 1, 3),
+            kt.transpose(0, 2, 1, 3),
+            vt.transpose(0, 2, 1, 3),
+            causal=causal, window=window, scale=scale,
+        )
+        return o.transpose(0, 2, 1, 3)
+
+    _, vjp_fn = jax.vjp(recompute, q, k, v)
+    return vjp_fn(g)
+
+
+_flash_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_tpu(
+    q: jax.Array,    # (B, H, Sq, D)
+    k: jax.Array,    # (B, KV, Sk, D)
+    v: jax.Array,    # (B, KV, Sk, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blockwise flash attention; ``interpret=None`` resolves per platform."""
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError(
+            "flash_attention: expected 4-D (B, H, S, D) tensors, got "
+            f"q={q.shape} k={k.shape} v={v.shape}"
+        )
+    B, H, Sq, D = q.shape
+    KV, Sk, Dv = k.shape[1], k.shape[2], v.shape[3]
+    if k.shape[0] != B or v.shape[0] != B:
+        raise ValueError(
+            f"flash_attention: batch dims disagree, q={B} k={k.shape[0]} "
+            f"v={v.shape[0]}"
+        )
+    if v.shape[1] != KV or v.shape[2] != Sk:
+        raise ValueError(
+            f"flash_attention: k has (KV={KV}, Sk={Sk}) but v has "
+            f"(KV={v.shape[1]}, Sk={v.shape[2]})"
+        )
+    if k.shape[3] != D:
+        raise ValueError(
+            f"flash_attention: head dim D={D} (q) != {k.shape[3]} (k)"
+        )
+    if H % KV != 0:
+        raise ValueError(
+            f"flash_attention: H={H} query heads not divisible by KV={KV} "
+            f"key/value heads (GQA group size must be integral)"
+        )
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    _validate_tiles("flash_attention", Sq=(Sq, block_q), Sk=(Sk, block_k))
+    return _flash_vjp(q, k, v, causal, window, float(scale), block_q, block_k,
+                      resolve_interpret(interpret))

@@ -1,9 +1,10 @@
 """Jit'd wrappers around the Pallas kernels (the public kernel API).
 
-On CPU backends (this container) the kernels run in interpret mode (the
-kernel body executes in Python for correctness validation); on TPU backends
-they compile natively. ``ssd_block`` also does the cheap chunking/cumsum prep
-that feeds the SSD kernel.
+Execution mode (compiled Pallas on TPU, interpret elsewhere) is resolved by
+:func:`repro.kernels.kernel_backend` — every wrapper takes ``interpret=None``
+and defers to it, so callers and the ``REPRO_KERNEL_BACKEND`` env override
+agree across all three kernels. ``ssd`` also does the cheap chunking/cumsum
+prep that feeds the SSD kernel.
 """
 from __future__ import annotations
 
@@ -17,12 +18,7 @@ from repro.kernels.ssd_scan import ssd_chunk_scan_tpu
 from repro.kernels.streaming_matmul import streaming_matmul
 
 
-def _on_tpu() -> bool:
-    return jax.devices()[0].platform == "tpu"
-
-
 def matmul(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
-    kw.setdefault("interpret", not _on_tpu())
     return streaming_matmul(x, w, **kw)
 
 
@@ -31,7 +27,6 @@ def attention(q, k, v, *, causal=True, window=None, scale=None,
     """q: (B,Sq,H,D), k/v: (B,Sk,KV,*) -> (B,Sq,H,Dv) (layout-matched to
 
     repro.models.flash.flash_attention)."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
     o = flash_attention_tpu(
         q.transpose(0, 2, 1, 3),
         k.transpose(0, 2, 1, 3),
@@ -49,7 +44,6 @@ def ssd(xh, Bm, Cm, dt, A, *, chunk: int = 128, interpret: bool | None = None):
     xh: (B,L,H,P); Bm/Cm: (B,L,G,N); dt: (B,L,H) fp32 post-softplus;
     A: (H,) negative. Returns y: (B,L,H,P) fp32.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
     B, L, H, P = xh.shape
     G, N = Bm.shape[2], Bm.shape[3]
     Q = min(chunk, L)

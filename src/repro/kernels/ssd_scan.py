@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, state, *, n_chunks):
     cb = pl.program_id(2)
@@ -64,7 +66,6 @@ def _kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, state, *, n_chunks):
     y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def ssd_chunk_scan_tpu(
     xc: jax.Array,    # (B, H, nc, Q, P)
     bc: jax.Array,    # (B, H, nc, Q, N)  (per-head broadcast B)
@@ -72,8 +73,15 @@ def ssd_chunk_scan_tpu(
     dtc: jax.Array,   # (B, H, nc, Q)     fp32 (softplus'd dt)
     cum: jax.Array,   # (B, H, nc, Q)     fp32 inclusive cumsum of dt*A
     *,
-    interpret: bool = False,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    """SSD chunk scan; ``interpret=None`` resolves per platform."""
+    return _ssd_call(xc, bc, cc, dtc, cum,
+                     interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _ssd_call(xc, bc, cc, dtc, cum, *, interpret: bool) -> jax.Array:
     B, H, nc, Q, P = xc.shape
     N = bc.shape[-1]
     grid = (B, H, nc)

@@ -12,6 +12,12 @@ paper's dual-buffer design verbatim, one memory level down:
   deferred access barrier   -> .wait() immediately before the dot
 
 Tiles are MXU-aligned (multiples of 128 on the contracting/lane dims).
+
+Differentiation: ``streaming_matmul`` carries a custom VJP whose cotangents
+stream through the *same* dual-buffered kernel with the tile blocks permuted
+— ``dx = g @ wᵀ`` reuses (block_m, block_k, block_n) as (bm, bn, bk) and
+``dw = xᵀ @ g`` as (bk, bn, bm), so the forward's divisibility guarantees
+carry over and the backward pass gets the same HBM-streaming overlap.
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
 
 
 def _kernel(x_ref, w_ref, o_ref, w_bufs, sems, acc, *, block_k: int, n_k: int):
@@ -57,27 +65,38 @@ def _kernel(x_ref, w_ref, o_ref, w_bufs, sems, acc, *, block_k: int, n_k: int):
         o_ref[...] = acc[...].astype(o_ref.dtype)
 
 
+def _validate_tiles(where: str, **dims: tuple[int, int]) -> None:
+    """Raise a ValueError naming the first dim not divisible by its block.
+
+    Mosaic's own failure mode for a ragged grid is an opaque lowering error
+    (or, in interpret mode, a silently zero-padded miscompute); callers get
+    the offending dimension by name instead.
+    """
+    for dim, (size, block) in dims.items():
+        if block <= 0:
+            raise ValueError(f"{where}: block for {dim} must be > 0, got {block}")
+        if size % block != 0:
+            raise ValueError(
+                f"{where}: {dim}={size} is not divisible by its block size "
+                f"{block}; pad {dim} to a multiple of {block} or pass a "
+                f"divisor block"
+            )
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
 )
-def streaming_matmul(
+def _matmul_call(
     x: jax.Array,            # (M, K)
     w: jax.Array,            # (K, N) — stays in HBM, streamed
     *,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
-    interpret: bool = False,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    interpret: bool,
 ) -> jax.Array:
     M, K = x.shape
-    K2, N = w.shape
-    assert K == K2, (K, K2)
-    block_m = min(block_m, M)
-    block_n = min(block_n, N)
-    block_k = min(block_k, K)
-    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
-        f"{(M, N, K)} not divisible by {(block_m, block_n, block_k)}"
-    )
+    _, N = w.shape
     n_k = K // block_k
 
     return pl.pallas_call(
@@ -96,3 +115,65 @@ def streaming_matmul(
         ],
         interpret=interpret,
     )(x, w)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _matmul_vjp(x, w, block_m, block_n, block_k, interpret):
+    return _matmul_call(x, w, block_m=block_m, block_n=block_n,
+                        block_k=block_k, interpret=interpret)
+
+
+def _matmul_fwd(x, w, block_m, block_n, block_k, interpret):
+    out = _matmul_call(x, w, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=interpret)
+    return out, (x, w)
+
+
+def _matmul_bwd(block_m, block_n, block_k, interpret, res, g):
+    x, w = res
+    # dx = g (M,N) @ wᵀ (N,K): output blocks (bm, bk), contraction block bn —
+    # every divisibility the forward checked holds under the permutation
+    dx = _matmul_call(g, w.T, block_m=block_m, block_n=block_k,
+                      block_k=block_n, interpret=interpret)
+    # dw = xᵀ (K,M) @ g (M,N): output blocks (bk, bn), contraction block bm
+    dw = _matmul_call(x.T, g, block_m=block_k, block_n=block_n,
+                      block_k=block_m, interpret=interpret)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def streaming_matmul(
+    x: jax.Array,            # (M, K)
+    w: jax.Array,            # (K, N) — stays in HBM, streamed
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``x @ w`` with ``w`` streamed through the dual VMEM buffer.
+
+    ``interpret=None`` resolves via :func:`repro.kernels.kernel_backend`
+    (compiled on TPU, interpret elsewhere, env-overridable). Differentiable:
+    see the module docstring for how the cotangents reuse the kernel.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(
+            f"streaming_matmul: expected 2-D x and w, got {x.shape} and {w.shape}"
+        )
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(
+            f"streaming_matmul: contracting dims disagree, x has K={K}, "
+            f"w has K={K2}"
+        )
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    _validate_tiles("streaming_matmul", M=(M, block_m), N=(N, block_n),
+                    K=(K, block_k))
+    return _matmul_vjp(x, w, block_m, block_n, block_k,
+                       resolve_interpret(interpret))

@@ -1,0 +1,286 @@
+"""The measured-overlap executor: bit-identity, placement, engine, simulate."""
+import numpy as np
+import pytest
+
+from repro.core.exec import (
+    HostFetchEngine,
+    StreamingExecutor,
+    StreamStage,
+    attention_chain,
+    balanced_throttle,
+    matmul_chain,
+    untiered_oracle,
+)
+from repro.core.fabric import INFINIBAND_100G
+from repro.core.metadata import Tier
+from repro.core.telemetry import Telemetry, validate_chrome_trace
+
+
+@pytest.fixture
+def mm_chain():
+    return matmul_chain(4, m=128, k=256, seed=0)
+
+
+def make_exec(stages, **kw):
+    kw.setdefault("throttle", 0.0)  # no pacing: unit tests measure nothing
+    return StreamingExecutor(stages, **kw)
+
+
+class TestBitIdentity:
+    """Streaming moves bytes, never changes math — for every config."""
+
+    @pytest.mark.parametrize("prefetch", [True, False])
+    @pytest.mark.parametrize("local_fraction", [0.0, 0.5])
+    def test_matmul_chain(self, mm_chain, prefetch, local_fraction):
+        stages, x0 = mm_chain
+        oracle = untiered_oracle(stages, x0)
+        ex = make_exec(stages, prefetch=prefetch)
+        ex.plan_tiers(local_fraction)
+        ex.warmup(x0)
+        res = ex.run(x0)
+        assert np.array_equal(np.asarray(res.output), oracle)
+        ex.engine.close()
+
+    @pytest.mark.parametrize("prefetch", [True, False])
+    def test_attention_chain(self, prefetch):
+        stages, q0 = attention_chain(2, seq=128, heads=4, kv_heads=2,
+                                     head_dim=32)
+        oracle = untiered_oracle(stages, q0)
+        ex = make_exec(stages, prefetch=prefetch)
+        ex.plan_tiers(0.0)
+        ex.warmup(q0)
+        res = ex.run(q0)
+        assert np.array_equal(np.asarray(res.output), oracle)
+        ex.engine.close()
+
+    def test_commit_output_roundtrip(self, mm_chain):
+        stages, x0 = mm_chain
+        ex = make_exec(stages, commit_output=True)
+        ex.plan_tiers(0.0)
+        res = ex.run(x0)
+        assert ex.engine.bytes_written == np.asarray(res.output).nbytes
+        ex.engine.close()
+
+
+class TestPlacement:
+    def test_plan_tiers_fractions(self, mm_chain):
+        stages, _ = mm_chain
+        ex = make_exec(stages)
+        plan = ex.plan_tiers(0.0)
+        assert len(plan.remote_names()) == len(stages)
+        assert all(st.tier is Tier.REMOTE for st in ex.stages)
+        plan = ex.plan_tiers(1.0)
+        assert not plan.remote_names()
+        assert all(st.tier is Tier.LOCAL for st in ex.stages)
+        plan = ex.plan_tiers(0.5)
+        assert 0 < len(plan.remote_names()) < len(stages)
+        ex.engine.close()
+
+    def test_local_stages_never_fetch(self, mm_chain):
+        stages, x0 = mm_chain
+        ex = make_exec(stages)
+        ex.plan_tiers(1.0)
+        res = ex.run(x0)
+        assert ex.engine.n_ops == 0
+        assert res.fetched_bytes == 0
+        assert not res.stage_wait_us
+        ex.engine.close()
+
+    def test_result_bookkeeping(self, mm_chain):
+        stages, x0 = mm_chain
+        ex = make_exec(stages)
+        ex.plan_tiers(0.0)
+        res = ex.run(x0)
+        assert set(res.stage_compute_us) == {st.name for st in stages}
+        assert set(res.stage_wait_us) == {st.name for st in stages}
+        assert res.fetched_bytes == sum(st.nbytes for st in stages)
+        assert res.elapsed_us >= res.compute_us > 0
+        ex.engine.close()
+
+
+class TestValidation:
+    def test_duplicate_stage_names(self):
+        st = StreamStage("w0", "matmul", {"w": np.zeros((8, 8), np.float32)})
+        with pytest.raises(ValueError, match="duplicate"):
+            StreamingExecutor([st, st])
+
+    def test_unknown_op(self):
+        st = StreamStage("w0", "conv", {"w": np.zeros((8, 8), np.float32)})
+        with pytest.raises(ValueError, match="unknown op"):
+            StreamingExecutor([st])
+
+    def test_negative_throttle(self):
+        with pytest.raises(ValueError, match="throttle"):
+            HostFetchEngine(throttle=-1.0)
+
+    def test_matmul_chain_needs_square(self):
+        with pytest.raises(ValueError, match="N == K"):
+            matmul_chain(2, k=256, n=128)
+
+    def test_balanced_throttle_needs_remote(self):
+        stages, _ = matmul_chain(2, m=128, k=256)
+        for st in stages:
+            st.tier = Tier.LOCAL
+        with pytest.raises(ValueError, match="no REMOTE"):
+            balanced_throttle(stages, {})
+
+
+class TestHostFetchEngine:
+    def test_measurements_collected(self):
+        eng = HostFetchEngine(throttle=0.0)
+        host = {"w": np.ones((64, 64), np.float32)}
+        out = eng.fetch("obj", host).result()
+        assert np.array_equal(np.asarray(out["w"]), host["w"])
+        assert eng.measurements == [("read", host["w"].nbytes,
+                                     pytest.approx(eng.measurements[0][2]))]
+        assert eng.bytes_read == host["w"].nbytes
+        eng.close()
+
+    def test_unpaced_fetch_not_measured(self):
+        eng = HostFetchEngine(throttle=0.0)
+        eng.fetch("obj", {"w": np.ones(16, np.float32)}, pace=False).result()
+        assert eng.measurements == []
+        assert eng.n_ops == 1  # still counted as traffic
+        eng.close()
+
+    def test_measure_sweep(self):
+        eng = HostFetchEngine(throttle=0.0)
+        new = eng.measure_sweep([1 << 10, 1 << 12], repeats=2)
+        kinds = {k for k, _, _ in new}
+        assert kinds == {"read", "write"}
+        assert len(new) == 2 * 2 * 2  # sizes x repeats x kinds
+        assert new == eng.measurements
+        eng.close()
+
+    def test_pace_us_scales_with_throttle(self):
+        eng = HostFetchEngine(throttle=2.0)
+        base = INFINIBAND_100G.stream_us("read", 1 << 20, eng.chunk_bytes,
+                                         mode="pipelined")
+        assert eng.pace_us("read", 1 << 20) == pytest.approx(2.0 * base)
+        eng.throttle = 0.0
+        assert eng.pace_us("read", 1 << 20) == 0.0
+        eng.close()
+
+    def test_prediction_model(self):
+        eng = HostFetchEngine(throttle=4.0)
+        assert eng.prediction_model().name == "infiniband-100g-x4"
+        eng.throttle = 0.0
+        assert eng.prediction_model() is eng.fabric
+        eng.close()
+
+    def test_wall_spans_recorded(self):
+        tel = Telemetry()
+        eng = HostFetchEngine(throttle=0.0, telemetry=tel)
+        eng.fetch("obj", {"w": np.ones(64, np.float32)}).result()
+        spans = tel.spans_on("wall/fabric", cats=("io",))
+        assert len(spans) == 1 and spans[0].name == "read"
+        assert spans[0].dur_us >= 0
+        eng.close()
+
+
+class TestSimulate:
+    def test_prefetch_beats_demand(self, mm_chain):
+        stages, x0 = mm_chain
+        ex = make_exec(stages)
+        ex.plan_tiers(0.0)
+        compute = {st.name: 500.0 for st in stages}
+        on = ex.simulate(compute_us=compute, prefetch=True)
+        off = ex.simulate(compute_us=compute, prefetch=False)
+        assert on.predicted_us < off.predicted_us
+        # serial lower bounds: off pays every fetch, on hides all but one
+        fetch = INFINIBAND_100G.stream_us(
+            "read", stages[0].nbytes, ex.engine.chunk_bytes, mode="pipelined")
+        assert off.predicted_us == pytest.approx(
+            sum(compute.values()) + 4 * fetch, rel=1e-6)
+        assert on.predicted_us >= sum(compute.values()) + fetch
+        ex.engine.close()
+
+    def test_error_vs(self, mm_chain):
+        stages, x0 = mm_chain
+        ex = make_exec(stages)
+        ex.plan_tiers(0.0)
+        rep = ex.simulate(compute_us={st.name: 100.0 for st in stages})
+        assert rep.error_vs(rep.predicted_us) == 0.0
+        assert rep.error_vs(rep.predicted_us / 2) == pytest.approx(1.0)
+        ex.engine.close()
+
+    def test_dual_track_trace(self, mm_chain):
+        """Wall spans and sim spans land in one valid Chrome trace."""
+        stages, x0 = mm_chain
+        tel = Telemetry()
+        ex = make_exec(stages, telemetry=tel)
+        ex.plan_tiers(0.0)
+        res = ex.run(x0)
+        ex.simulate(compute_us=res.stage_compute_us, telemetry=tel)
+        tracks = tel.tracks()
+        assert "wall/exec" in tracks and "wall/fabric" in tracks
+        assert "sim/exec" in tracks and "sim/fabric" in tracks
+        validate_chrome_trace(tel.to_chrome_trace())
+        ex.engine.close()
+
+    def test_sim_mirrors_commit(self, mm_chain):
+        stages, x0 = mm_chain
+        ex = make_exec(stages, commit_output=True)
+        ex.plan_tiers(0.0)
+        compute = {st.name: 100.0 for st in stages}
+        plain = ex.simulate(compute_us=compute, commit_bytes=0)
+        committed = ex.simulate(compute_us=compute, commit_bytes=1 << 20)
+        assert committed.predicted_us > plain.predicted_us
+        ex.engine.close()
+
+
+class TestMeasuredOverlap:
+    def test_paced_prefetch_is_faster(self):
+        """The tentpole claim, at test scale: wall-clock prefetch-on beats
+        prefetch-off when fetch is paced against real compute."""
+        stages, x0 = matmul_chain(4, m=256, k=512)
+        probe = make_exec(stages)
+        probe.plan_tiers(0.0)
+        probe.warmup(x0)
+        compute = probe.run(x0).stage_compute_us
+        probe.engine.close()
+        throttle = balanced_throttle(stages, compute)
+        ex = StreamingExecutor(stages, prefetch=True, throttle=throttle)
+        ex.plan_tiers(0.0)
+        ex.warmup(x0)
+        on = min(ex.run(x0).elapsed_us for _ in range(2))
+        ex.prefetch = False
+        off = min(ex.run(x0).elapsed_us for _ in range(2))
+        ex.engine.close()
+        # ideal is ~1.6x at 4 stages; 1.1 leaves wide headroom for CI noise
+        assert off / on > 1.1, f"overlap speedup {off / on:.2f}x <= 1.1x"
+
+    def test_balanced_throttle_balances(self):
+        stages, _ = matmul_chain(3, m=128, k=256)
+        compute = {st.name: 1000.0 for st in stages}
+        thr = balanced_throttle(stages, compute)
+        eng = HostFetchEngine(throttle=thr)
+        assert eng.pace_us("read", stages[0].nbytes) == pytest.approx(1000.0)
+        eng.close()
+
+
+class TestLatencyHidingFlags:
+    """launch.mesh.apply_latency_hiding_flags: the compiled-graph recipe."""
+
+    def test_appends_once(self):
+        from repro.launch.mesh import (
+            LATENCY_HIDING_XLA_FLAGS,
+            apply_latency_hiding_flags,
+        )
+
+        env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+        flags = apply_latency_hiding_flags(target="gpu", env=env)
+        for f in LATENCY_HIDING_XLA_FLAGS:
+            assert f in flags.split()
+        assert "--xla_force_host_platform_device_count=8" in flags.split()
+        # idempotent: a second call changes nothing
+        assert apply_latency_hiding_flags(target="gpu", env=env) == flags
+        assert env["XLA_FLAGS"] == flags
+
+    def test_non_gpu_targets_noop(self):
+        from repro.launch.mesh import apply_latency_hiding_flags
+
+        for target in ("tpu", "cpu"):
+            env = {}
+            assert apply_latency_hiding_flags(target=target, env=env) == ""
+            assert "XLA_FLAGS" not in env

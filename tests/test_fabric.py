@@ -144,3 +144,98 @@ class TestClockGuards:
         with pytest.raises(ValueError):
             clock.advance("main", float("nan"))
         assert clock.now("main") == 2.0
+
+
+class TestFitFabricModel:
+    """Calibration from wall-clock measurements (the PR-8 feedback loop)."""
+
+    def _samples(self, base_us, gbps, sizes, kind="read"):
+        return [(kind, n, base_us + n / (gbps * 1e3)) for n in sizes]
+
+    def test_exact_recovery(self):
+        from repro.core import fit_fabric_model
+
+        sizes = [1 << 16, 1 << 18, 1 << 20, 4 << 20]
+        meas = (self._samples(50.0, 2.0, sizes, "read")
+                + self._samples(10.0, 8.0, sizes, "write"))
+        model = fit_fabric_model(meas, base=INFINIBAND_100G)
+        assert model.read_base_us == pytest.approx(50.0, rel=1e-6)
+        assert model.read_gbps == pytest.approx(2.0, rel=1e-6)
+        assert model.write_base_us == pytest.approx(10.0, rel=1e-6)
+        assert model.write_gbps == pytest.approx(8.0, rel=1e-6)
+        # measured path is fully posted: line rate == single-op rate
+        assert model.read_line_gbps == pytest.approx(2.0, rel=1e-6)
+        assert model.name == "infiniband-100g-calibrated"
+
+    def test_missing_kind_keeps_base(self):
+        from repro.core import fit_fabric_model
+
+        meas = self._samples(5.0, 4.0, [1 << 16, 1 << 20], "read")
+        model = fit_fabric_model(meas, base=INFINIBAND_100G)
+        assert model.read_gbps == pytest.approx(4.0, rel=1e-6)
+        assert model.write_gbps == INFINIBAND_100G.write_gbps
+        assert model.write_base_us == INFINIBAND_100G.write_base_us
+
+    def test_single_size_keeps_base(self):
+        from repro.core import fit_fabric_model
+
+        meas = [("read", 1 << 20, 100.0)] * 5
+        model = fit_fabric_model(meas, base=INFINIBAND_100G)
+        assert model.read_gbps == INFINIBAND_100G.read_gbps
+
+    def test_negative_intercept_clamped(self):
+        from repro.core import fit_fabric_model
+
+        # Two points whose affine fit has a negative base: clamp to 0 and
+        # refit bandwidth through the sample mean.
+        meas = [("read", 1 << 20, 50.0), ("read", 2 << 20, 110.0)]
+        model = fit_fabric_model(meas, base=INFINIBAND_100G)
+        assert model.read_base_us == 0.0
+        mean_n = ((1 << 20) + (2 << 20)) / 2
+        assert model.read_gbps == pytest.approx(mean_n / 80.0 / 1e3, rel=1e-6)
+
+    def test_bad_samples_raise(self):
+        from repro.core import fit_fabric_model
+
+        with pytest.raises(ValueError, match="unknown op kind"):
+            fit_fabric_model([("atomic", 64, 1.0)], base=INFINIBAND_100G)
+        with pytest.raises(ValueError, match="bad sample"):
+            fit_fabric_model([("read", 0, 1.0)], base=INFINIBAND_100G)
+
+    def test_zero_slope_raises(self):
+        from repro.core import fit_fabric_model
+
+        meas = [("read", 1 << 16, 100.0), ("read", 4 << 20, 100.0)]
+        with pytest.raises(ValueError, match="non-positive read bandwidth"):
+            fit_fabric_model(meas, base=INFINIBAND_100G)
+
+    def test_resource_calibrate_replaces_model(self):
+        from repro.core import FabricResource, fit_fabric_model
+
+        qp = FabricResource(SimClock(), INFINIBAND_100G, name="qp-cal")
+        sizes = [1 << 18, 1 << 20]
+        model = qp.calibrate(self._samples(20.0, 1.0, sizes))
+        assert qp.model is model
+        assert qp.model.read_gbps == pytest.approx(1.0, rel=1e-6)
+        # subsequent ops price with the calibrated parameters
+        _, end = qp.issue("read", 1 << 20, 0.0)
+        assert end == pytest.approx(20.0 + (1 << 20) / 1e3, rel=1e-6)
+
+
+class TestScaled:
+    def test_scaled_times(self):
+        m = INFINIBAND_100G.scaled(3.0)
+        assert m.read_us(4 * MIB) == pytest.approx(
+            3.0 * INFINIBAND_100G.read_us(4 * MIB), rel=1e-6)
+        assert m.write_us(1 << 16) == pytest.approx(
+            3.0 * INFINIBAND_100G.write_us(1 << 16), rel=1e-6)
+        assert m.stream_us("read", 4 * MIB, 4 * MIB, mode="serial") == pytest.approx(
+            3.0 * INFINIBAND_100G.stream_us("read", 4 * MIB, 4 * MIB,
+                                            mode="serial"), rel=1e-6)
+        assert m.name == "infiniband-100g-x3"
+
+    def test_scaled_invalid_factor(self):
+        with pytest.raises(ValueError, match="factor"):
+            INFINIBAND_100G.scaled(0.0)
+        with pytest.raises(ValueError, match="factor"):
+            INFINIBAND_100G.scaled(-2.0)

@@ -86,3 +86,163 @@ def test_ops_attention_layout_roundtrip():
     got = ops.attention(q, k, v, block_q=64, block_k=64, interpret=True)
     want = jnp_flash(q, k, v, block_k=64)
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+class TestBackendHelper:
+    """kernel_backend()/resolve_interpret(): the one platform decision."""
+
+    def test_auto_resolves_by_platform(self, monkeypatch):
+        from repro import kernels
+
+        monkeypatch.delenv(kernels.BACKEND_ENV, raising=False)
+        backend = kernels.kernel_backend()
+        on_tpu = jax.devices()[0].platform == "tpu"
+        assert backend == ("pallas" if on_tpu else "interpret")
+        assert kernels.resolve_interpret(None) is (not on_tpu)
+
+    @pytest.mark.parametrize("choice,interpret", [
+        ("pallas", False), ("interpret", True),
+    ])
+    def test_env_override(self, monkeypatch, choice, interpret):
+        from repro import kernels
+
+        monkeypatch.setenv(kernels.BACKEND_ENV, choice)
+        assert kernels.kernel_backend() == choice
+        assert kernels.resolve_interpret(None) is interpret
+
+    def test_explicit_beats_env(self, monkeypatch):
+        from repro import kernels
+
+        monkeypatch.setenv(kernels.BACKEND_ENV, "pallas")
+        assert kernels.resolve_interpret(True) is True
+
+    def test_bad_env_value(self, monkeypatch):
+        from repro import kernels
+
+        monkeypatch.setenv(kernels.BACKEND_ENV, "gpu")
+        with pytest.raises(ValueError, match="REPRO_KERNEL_BACKEND"):
+            kernels.kernel_backend()
+
+
+class TestShapeValidation:
+    """Non-tile-divisible shapes fail fast, naming the offending dim."""
+
+    def test_matmul_bad_k(self):
+        x = jnp.ones((128, 300))
+        w = jnp.ones((300, 128))
+        with pytest.raises(ValueError, match=r"K=300.*block size 128"):
+            streaming_matmul(x, w, block_m=128, block_n=128, block_k=128,
+                             interpret=True)
+
+    def test_matmul_bad_m(self):
+        x = jnp.ones((100, 256))
+        w = jnp.ones((256, 128))
+        with pytest.raises(ValueError, match=r"M=100"):
+            streaming_matmul(x, w, block_m=64, block_n=128, block_k=128,
+                             interpret=True)
+
+    def test_matmul_k_mismatch(self):
+        with pytest.raises(ValueError, match="contracting dims"):
+            streaming_matmul(jnp.ones((128, 256)), jnp.ones((128, 256)),
+                             interpret=True)
+
+    def test_flash_bad_sq(self):
+        q = jnp.ones((1, 4, 100, 32))
+        k = jnp.ones((1, 2, 128, 32))
+        with pytest.raises(ValueError, match=r"Sq=100"):
+            flash_attention_tpu(q, k, k, block_q=64, block_k=64,
+                                interpret=True)
+
+    def test_flash_bad_gqa_group(self):
+        q = jnp.ones((1, 3, 128, 32))
+        k = jnp.ones((1, 2, 128, 32))
+        with pytest.raises(ValueError, match="GQA group size"):
+            flash_attention_tpu(q, k, k, block_q=64, block_k=64,
+                                interpret=True)
+
+
+class TestKernelGrads:
+    """custom_vjp vs jax.grad through the jnp oracles."""
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-3), (jnp.bfloat16, 0.6)])
+    def test_matmul_grads(self, dtype, tol):
+        ks = jax.random.split(jax.random.PRNGKey(7), 2)
+        x = jax.random.normal(ks[0], (128, 256), jnp.float32).astype(dtype)
+        w = jax.random.normal(ks[1], (256, 128), jnp.float32).astype(dtype)
+
+        def loss_kernel(x, w):
+            y = streaming_matmul(x, w, block_m=128, block_n=128,
+                                 block_k=128, interpret=True)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+
+        def loss_ref(x, w):
+            return jnp.sum(ref.matmul_ref(x, w).astype(jnp.float32) ** 2)
+
+        gx, gw = jax.grad(loss_kernel, argnums=(0, 1))(x, w)
+        rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+        assert gx.dtype == x.dtype and gw.dtype == w.dtype
+        np.testing.assert_allclose(gx.astype(jnp.float32) / 256,
+                                   rx.astype(jnp.float32) / 256,
+                                   atol=tol, rtol=tol)
+        np.testing.assert_allclose(gw.astype(jnp.float32) / 256,
+                                   rw.astype(jnp.float32) / 256,
+                                   atol=tol, rtol=tol)
+
+    @pytest.mark.parametrize("B,H,KV,S,D,causal,window", [
+        (1, 4, 2, 128, 32, True, None),     # GQA causal
+        (1, 4, 4, 128, 32, False, None),    # MHA full
+        (2, 4, 1, 128, 32, True, 64),       # MQA + sliding window
+    ])
+    def test_flash_grads(self, B, H, KV, S, D, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(8), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D))
+        k = jax.random.normal(ks[1], (B, KV, S, D))
+        v = jax.random.normal(ks[2], (B, KV, S, D))
+
+        def loss_kernel(q, k, v):
+            o = flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                    block_q=64, block_k=64, interpret=True)
+            return jnp.sum(o ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.flash_ref(q, k, v, causal=causal,
+                                         window=window) ** 2)
+
+        got = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for g, r, name in zip(got, want, "qkv"):
+            np.testing.assert_allclose(g, r, atol=2e-3, rtol=2e-3,
+                                       err_msg=f"d{name} mismatch")
+
+    def test_flash_grads_bf16(self):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (1, 4, 128, 32)).astype(jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 2, 128, 32)).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 2, 128, 32)).astype(jnp.bfloat16)
+
+        def loss(q, k, v):
+            o = flash_attention_tpu(q, k, v, block_q=64, block_k=64,
+                                    interpret=True)
+            return jnp.sum(o.astype(jnp.float32) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.flash_ref(q, k, v).astype(jnp.float32) ** 2)
+
+        got = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+        want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for g, r, name in zip(got, want, "qkv"):
+            assert g.dtype == jnp.bfloat16
+            np.testing.assert_allclose(g.astype(jnp.float32),
+                                       r.astype(jnp.float32),
+                                       atol=0.15, rtol=0.15,
+                                       err_msg=f"d{name} mismatch")
+
+    def test_grad_through_ops_matmul(self):
+        """The ops-layer wrapper is differentiable too (exec path uses it)."""
+        x = jax.random.normal(jax.random.PRNGKey(10), (128, 256))
+        w = jax.random.normal(jax.random.PRNGKey(11), (256, 128))
+        g = jax.grad(lambda w: jnp.sum(
+            ops.matmul(x, w, block_m=128, block_n=128, block_k=128,
+                       interpret=True)))(w)
+        r = jax.grad(lambda w: jnp.sum(ref.matmul_ref(x, w)))(w)
+        np.testing.assert_allclose(g, r, atol=1e-4, rtol=1e-4)
