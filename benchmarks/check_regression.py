@@ -26,16 +26,25 @@ Three committed perf contracts are enforced:
   (absolute, not relative — wall clock on shared runners is too noisy for
   a tight relative check), and that every configuration's calibrated
   simulator prediction error stays under the committed bound.
+* ``BENCH_pr9.json`` — the multi-tenant serving contract
+  (``benchmarks/fig_serving_mt.py --bench-json``). The gate compares the
+  deterministic admission trajectory exactly (node counts, shed events,
+  per-tenant completions — the controller runs on modeled compute charges),
+  requires bit-identity to the sequential oracle, holds every admitted
+  tenant's re-simulated degradation under the committed target, and checks
+  per-tenant step latency (real wall-clock) only against a wide
+  ``--churn-tolerance``-style bound.
 
-CI runs all four in the ``bench-regression`` job; locally the same way:
+CI runs all five in the ``bench-regression`` job; locally the same way:
 
     PYTHONPATH=src python -m benchmarks.run --bench-json /tmp/bench.json
     PYTHONPATH=src python -m benchmarks.fig_autoscale --bench-json /tmp/pr5.json
     PYTHONPATH=src python -m benchmarks.fig_alloc_churn --bench-json /tmp/pr7.json
     PYTHONPATH=src python -m benchmarks.fig_measured_overlap --bench-json /tmp/pr8.json
+    PYTHONPATH=src python -m benchmarks.fig_serving_mt --bench-json /tmp/pr9.json
     python -m benchmarks.check_regression --current /tmp/bench.json \\
         --pr5-current /tmp/pr5.json --pr7-current /tmp/pr7.json \\
-        --pr8-current /tmp/pr8.json
+        --pr8-current /tmp/pr8.json --pr9-current /tmp/pr9.json
 """
 from __future__ import annotations
 
@@ -47,7 +56,9 @@ DEFAULT_BASELINE = "BENCH_pr3.json"
 DEFAULT_PR5_BASELINE = "BENCH_pr5.json"
 DEFAULT_PR7_BASELINE = "BENCH_pr7.json"
 DEFAULT_PR8_BASELINE = "BENCH_pr8.json"
+DEFAULT_PR9_BASELINE = "BENCH_pr9.json"
 DEFAULT_TOLERANCE = 0.10
+DEFAULT_LATENCY_TOLERANCE = 4.0
 DEFAULT_CHURN_TOLERANCE = 0.50
 METRIC = "pipeline_speedup"
 
@@ -199,6 +210,61 @@ def compare_overlap(baseline: dict, current: dict) -> list[str]:
     return problems
 
 
+def compare_serving_mt(baseline: dict, current: dict,
+                       lat_tolerance: float) -> list[str]:
+    """Gate the multi-tenant serving contract (empty = pass).
+
+    Admission decisions are deterministic (modeled compute charges, seeded
+    prompts), so node trajectory, shed events, and per-tenant completions
+    must match the committed baseline exactly; bit-identity to the
+    sequential oracle is a hard invariant; admitted degradation must stay
+    under the committed target. Per-tenant step latency is real wall-clock
+    and only fails when it exceeds baseline by the (wide) ``lat_tolerance``
+    multiple.
+    """
+    problems: list[str] = []
+    for key in ("nodes_trajectory", "shed_events", "completed",
+                "bit_identical", "max_admitted_degradation",
+                "degradation_target", "latency_us"):
+        if key not in baseline:
+            problems.append(f"serving_mt baseline missing {key!r}")
+        if key not in current:
+            problems.append(f"serving_mt current run missing {key!r}")
+    if problems:
+        return problems
+    if current["bit_identical"] is not True:
+        problems.append("serving_mt: tokens no longer bit-identical to the "
+                        "sequential per-tenant oracle")
+    for key in ("nodes_trajectory", "shed_events", "completed"):
+        if current[key] != baseline[key]:
+            problems.append(
+                f"serving_mt: {key} {current[key]} != baseline "
+                f"{baseline[key]}"
+            )
+    target = baseline["degradation_target"]
+    if current["max_admitted_degradation"] > target + 1e-9:
+        problems.append(
+            f"serving_mt: max_admitted_degradation "
+            f"{current['max_admitted_degradation']:.3f} > committed target "
+            f"{target}"
+        )
+    for tenant, base_lat in baseline["latency_us"].items():
+        cur_lat = current["latency_us"].get(tenant)
+        if cur_lat is None:
+            problems.append(f"serving_mt: tenant {tenant} missing from "
+                            f"current latency stats")
+            continue
+        for key in ("p50_step_us", "p99_step_us"):
+            ceil = base_lat[key] * (1.0 + lat_tolerance)
+            if cur_lat[key] > ceil:
+                problems.append(
+                    f"serving_mt: {tenant} {key} {cur_lat[key]:.0f}us > "
+                    f"ceiling {ceil:.0f}us (baseline {base_lat[key]:.0f}us, "
+                    f"tolerance {lat_tolerance:.0%})"
+                )
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -240,6 +306,17 @@ def main(argv: list[str] | None = None) -> int:
         help="fresh fig_measured_overlap --bench-json output to check",
     )
     parser.add_argument(
+        "--pr9-baseline",
+        default=DEFAULT_PR9_BASELINE,
+        help=f"committed multi-tenant serving baseline "
+             f"(default {DEFAULT_PR9_BASELINE})",
+    )
+    parser.add_argument(
+        "--pr9-current",
+        default=None,
+        help="fresh fig_serving_mt --bench-json output to check",
+    )
+    parser.add_argument(
         "--tolerance",
         type=float,
         default=DEFAULT_TOLERANCE,
@@ -252,11 +329,20 @@ def main(argv: list[str] | None = None) -> int:
         help="allowed relative churn-throughput drop (default 0.50; "
         "wall-clock is noisy on shared CI runners)",
     )
+    parser.add_argument(
+        "--latency-tolerance",
+        type=float,
+        default=DEFAULT_LATENCY_TOLERANCE,
+        help="allowed relative per-tenant step-latency growth for the "
+        f"serving contract (default {DEFAULT_LATENCY_TOLERANCE}; wall-clock "
+        "decode steps are very noisy on shared CI runners)",
+    )
     args = parser.parse_args(argv)
     if (args.current is None and args.pr5_current is None
-            and args.pr7_current is None and args.pr8_current is None):
+            and args.pr7_current is None and args.pr8_current is None
+            and args.pr9_current is None):
         parser.error("pass --current, --pr5-current, --pr7-current, "
-                     "and/or --pr8-current")
+                     "--pr8-current, and/or --pr9-current")
 
     problems: list[str] = []
     n_checked = 0
@@ -315,6 +401,21 @@ def main(argv: list[str] | None = None) -> int:
             f"floor={pr8_baseline.get('speedup_floor')} "
             f"max_err={pr8_current.get('max_sim_error', float('nan')):.3f} "
             f"bound={pr8_baseline.get('sim_error_bound')}"
+        )
+
+    if args.pr9_current is not None:
+        with open(args.pr9_baseline) as f:
+            pr9_baseline = json.load(f)
+        with open(args.pr9_current) as f:
+            pr9_current = json.load(f)
+        problems += compare_serving_mt(pr9_baseline, pr9_current,
+                                       args.latency_tolerance)
+        n_checked += 1
+        print(
+            f"check_regression/serving_mt,"
+            f"{pr9_current.get('max_admitted_degradation', float('nan')):.3f},"
+            f"nodes={pr9_current.get('nodes_trajectory')} "
+            f"shed={pr9_current.get('shed_events')}"
         )
 
     if problems:

@@ -1,0 +1,263 @@
+"""Multi-tenant continuous-batching scheduler under a drifting tenant mix.
+
+Three named tenants stream requests at one shared engine slot pool through
+the :class:`~repro.serving.scheduler.ContinuousScheduler` (DESIGN.md §12):
+two steady short-prompt tenants plus a long-context tenant that arrives
+mid-run and overwhelms the shared elastic pool. Cost-model admission
+control prices every tenant's KV working set against the per-tenant ≤16%
+degradation SLO and sheds the heaviest tenant while the burst holds; once
+the burst's working set decays out of the rolling profiles the shed
+tenant's queued requests are re-admitted and complete.
+
+Asserted at every admission point (the PR's acceptance bar):
+
+  * every *admitted* tenant's re-simulated degradation ≤ the 16% target;
+  * installed pool capacity covers the summed admitted working sets;
+
+and across the run: at least one tenant is shed during the burst, every
+submitted request eventually completes (shed work is re-admitted after the
+load drops), the node trajectory grows on the burst and shrinks back, and
+every request's tokens are **bit-identical** to a per-tenant sequential
+oracle (each request run alone through a fresh engine at the same batch
+shape).
+
+``--smoke`` runs a shortened mix (CI's serving-mt-smoke job);
+``--bench-json PATH`` writes the multi-tenant serving contract consumed by
+``benchmarks/check_regression.py --pr9-current`` (committed as
+``BENCH_pr9.json``); ``--trace-out PATH`` exports the Chrome trace.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.telemetry import Telemetry
+from repro.models import get_model
+from repro.serving import (
+    ContinuousScheduler,
+    EngineConfig,
+    Request,
+    SchedulerConfig,
+    ServingEngine,
+)
+
+from benchmarks.common import emit, save_json
+
+KIB = 1 << 10
+DEGRADATION_TARGET = 0.16
+SHORT_P, LONG_P = 3, 40
+SHORT_NEW, LONG_NEW = 4, 8
+
+
+def _phases(smoke: bool) -> list[tuple[str, dict[str, tuple[int, int, int]], int]]:
+    """(phase, {tenant: (prompt_len, max_new, n_requests)}, n_rounds)."""
+    warm = {"acme": (SHORT_P, SHORT_NEW, 2), "blue": (SHORT_P, SHORT_NEW, 2)}
+    burst = {
+        "acme": (SHORT_P, SHORT_NEW, 2),
+        "blue": (SHORT_P, SHORT_NEW, 2),
+        "crest": (LONG_P, LONG_NEW, 2),
+    }
+    cool = {"acme": (SHORT_P, SHORT_NEW, 1), "blue": (SHORT_P, SHORT_NEW, 1)}
+    if smoke:
+        return [("warm", warm, 1), ("burst", burst, 2), ("cool", cool, 3)]
+    return [("warm", warm, 2), ("burst", burst, 3), ("cool", cool, 6)]
+
+
+def _make_prompt(tenant: str, k: int, plen: int, vocab: int) -> np.ndarray:
+    """Deterministic per-request prompt (tenant- and index-salted)."""
+    salt = sum(ord(c) for c in tenant) * 31 + k * 7
+    return ((np.arange(plen, dtype=np.int32) * 13 + salt) % (vocab - 1)) + 1
+
+
+def _drive(sched: ContinuousScheduler, smoke: bool,
+           vocab: int) -> list[tuple[str, Request]]:
+    """Run the drifting mix through ``sched``; returns submissions in order."""
+    submitted: list[tuple[str, Request]] = []
+    k = 0
+    for phase, mix, n_rounds in _phases(smoke):
+        for _ in range(n_rounds):
+            for tenant in sorted(mix):
+                plen, max_new, n_req = mix[tenant]
+                for _i in range(n_req):
+                    k += 1
+                    req = Request(
+                        tenant=tenant,
+                        prompt=_make_prompt(tenant, k, plen, vocab),
+                        max_new=max_new,
+                    )
+                    submitted.append((phase, req))
+                    sched.submit(dataclasses.replace(req))
+            for _s in range(sched.scfg.readvise_every):
+                sched.step()
+    sched.drain(max_steps=5000)
+    # idle re-advises: the drained working set decays out of the rolling
+    # profiles and the pool scales back down (the scale-in half of the loop)
+    for _ in range(4):
+        sched.readvise()
+    return submitted
+
+
+def _build(telemetry: Telemetry | None) -> tuple[ServingEngine, SchedulerConfig]:
+    cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    total = sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params))
+    eng = ServingEngine(
+        cfg, params,
+        EngineConfig(
+            max_batch=4, max_len=64,
+            hbm_budget_bytes=int(total * 0.2),
+            pool_nodes=1, pool_stripe_bytes=4 * KIB,
+        ),
+        telemetry=telemetry,
+    )
+    scfg = SchedulerConfig(
+        readvise_every=6,
+        degradation_target=DEGRADATION_TARGET,
+        window=4, decay=0.5,
+        # sized so the burst's three-tenant working set cannot fit the
+        # max_nodes clamp (forcing a shed) while any two tenants can
+        node_capacity_bytes=16 * KIB,
+        min_nodes=1, max_nodes=6,
+        compute_us_per_token=200.0,
+    )
+    return eng, scfg
+
+
+def run(*, smoke: bool = False, bench_json: str | None = None,
+        trace_out: str | None = None) -> dict:
+    telemetry = Telemetry() if trace_out else None
+    eng, scfg = _build(telemetry)
+    cfg = eng.cfg
+    sched = ContinuousScheduler(eng, scfg)
+    # compile outside the measured mix: free lanes only, reset on grant
+    eng.decode_lanes(np.zeros(eng.ecfg.max_batch, np.int32))
+
+    submitted = _drive(sched, smoke, cfg.vocab_size)
+    results = sched.results()
+    lat = sched.latency_stats()
+    log = sched.admission_log
+
+    n_done = sum(len(rs) for rs in results.values())
+    assert n_done == len(submitted), (
+        f"{len(submitted) - n_done} requests never completed "
+        f"(shed work not re-admitted?)"
+    )
+    assert log, "admission controller never ran"
+
+    # per-tenant SLO, audited at every admission point
+    max_admitted_deg = 0.0
+    for entry in log:
+        for tenant, row in entry["tenants"].items():
+            if not row["admitted"] or row["advised_budget_bytes"] is None:
+                continue
+            deg = row["resim_degradation"]
+            max_admitted_deg = max(max_admitted_deg, deg)
+            assert deg <= DEGRADATION_TARGET + 1e-9, (
+                f"step {entry['step']}: admitted tenant {tenant} "
+                f"re-simulated degradation {deg:.3f} > {DEGRADATION_TARGET}"
+            )
+        capacity = entry["n_alive"] * scfg.node_capacity_bytes
+        admitted_bytes = sum(
+            row["remote_kv_bytes"] for row in entry["tenants"].values()
+            if row["admitted"]
+        )
+        assert capacity >= admitted_bytes, (
+            f"step {entry['step']}: capacity {capacity} < admitted working "
+            f"set {admitted_bytes}"
+        )
+
+    shed_events = [t for entry in log for t in entry["shed"]]
+    assert shed_events, "burst never forced a shed — admission is inert"
+    shed_tenant = shed_events[0]
+    assert results.get(shed_tenant), (
+        f"shed tenant {shed_tenant} never completed any request"
+    )
+
+    nodes = [entry["n_alive"] for entry in log]
+    assert max(nodes) > nodes[0], f"pool never grew on the burst: {nodes}"
+    assert nodes[-1] < max(nodes), (
+        f"pool never shrank after the burst decayed: {nodes}"
+    )
+
+    # bit-identity: every request run alone through a fresh engine
+    oracle_eng, _ = _build(None)
+    oracle = ContinuousScheduler(oracle_eng, scfg)
+    oracle_eng.decode_lanes(np.zeros(oracle_eng.ecfg.max_batch, np.int32))
+    expect: dict[str, np.ndarray] = {}
+    for _phase, req in submitted:
+        rid = oracle.submit(dataclasses.replace(req))
+        oracle.drain(max_steps=5000)
+        done = oracle.tenants[req.tenant].completed[-1]
+        assert done["request_id"] == rid
+        expect[rid] = done["tokens"]
+    mismatched = [
+        r["request_id"]
+        for rs in results.values() for r in rs
+        if not np.array_equal(expect[r["request_id"]], r["tokens"])
+    ]
+    assert not mismatched, (
+        f"tokens diverged from the sequential oracle: {mismatched}"
+    )
+
+    for tenant in sorted(lat):
+        s = lat[tenant]
+        emit(f"fig_serving_mt/{tenant}", s["p50_step_us"],
+             f"p99={s['p99_step_us']:.0f}us done={s['n_completed']} "
+             f"shed={s['shed_count']} deg={s['resim_degradation']:.3f}")
+    emit("fig_serving_mt/headline", 0.0,
+         f"nodes={nodes} shed={shed_events} "
+         f"max_admitted_deg={max_admitted_deg:.3f} requests={n_done}")
+
+    contract = {
+        "degradation_target": DEGRADATION_TARGET,
+        "max_admitted_degradation": max_admitted_deg,
+        "nodes_trajectory": nodes,
+        "shed_events": shed_events,
+        "n_readvise": len(log),
+        "n_requests": n_done,
+        "completed": {t: len(rs) for t, rs in results.items()},
+        "bit_identical": not mismatched,
+        "latency_us": {
+            t: {"p50_step_us": lat[t]["p50_step_us"],
+                "p99_step_us": lat[t]["p99_step_us"]}
+            for t in sorted(lat)
+        },
+        "smoke": smoke,
+    }
+    payload = {"serving_mt": contract, "admission_log": log}
+    save_json("fig_serving_mt", payload)
+    if bench_json:
+        with open(bench_json, "w") as f:
+            json.dump(contract, f, indent=1, sort_keys=True)
+            f.write("\n")
+        emit("fig_serving_mt/bench_json", 0.0, bench_json)
+    if trace_out:
+        telemetry.write_chrome_trace(trace_out)
+        emit("fig_serving_mt/trace", 0.0, trace_out)
+    return payload
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="shortened tenant mix (CI serving-mt-smoke)")
+    parser.add_argument("--bench-json", nargs="?", const="BENCH_pr9.json",
+                        default=None, metavar="PATH",
+                        help="write the multi-tenant serving contract to "
+                             "PATH (default: BENCH_pr9.json)")
+    parser.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="export the Chrome trace to PATH")
+    args = parser.parse_args()
+    run(smoke=args.smoke, bench_json=args.bench_json,
+        trace_out=args.trace_out)
+
+
+if __name__ == "__main__":
+    main()

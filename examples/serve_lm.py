@@ -1,15 +1,24 @@
-"""Serve a small LM with batched requests through the DOLMA-aware engine.
+"""Single-tenant serving walkthrough: placement, pressure, autoscaling.
 
-The engine catalogs params + KV cache as data objects and runs the placement
-policy against an HBM budget; batched greedy decoding then runs through the
-compiled decode step. With ``autoscale=`` the engine also profiles each
-request wave, re-runs the quantitative sizing advisor, and grows/shrinks
-the remote memory pool as the KV working set drifts (DESIGN.md §8).
+Three engines over the same small LM, in order:
 
-Run:  PYTHONPATH=src python examples/serve_lm.py
+1. **Roomy budget** — the engine catalogs params + KV cache as DOLMA data
+   objects, the placement policy keeps everything local, and batched
+   greedy decoding runs through one compiled step.
+2. **Tight budget** (``hbm_budget_bytes=1 MiB``) — the policy demotes
+   cache/param objects; demoted KV tiers overflow into the remote pool.
+   Output stays bit-identical: tiering changes *where* bytes live, never
+   what is computed.
+3. **Autoscaled** — each wave is profiled into a ``RollingProfile``, the
+   sizing advisor re-prices the KV working set every ``readvise_every``
+   waves, and the pool grows/shrinks online as the prompt mix drifts
+   short → long → short (DESIGN.md §8). The decision log prints at the
+   end: nodes, advised fraction, re-simulated degradation per wave.
 
-``--trace-out serve.json`` records wave spans (wall clock) and pool/fabric
-spans (simulated clock) and writes one Chrome-trace JSON for Perfetto.
+Run:  PYTHONPATH=src python examples/serve_lm.py [--trace-out serve.json]
+
+For multiple tenants sharing one engine under admission control, see
+``examples/serve_multitenant.py`` (DESIGN.md §12).
 """
 import argparse
 import time
@@ -25,9 +34,14 @@ from repro.serving import AutoscaleConfig, EngineConfig, ServingEngine
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Serve a small LM through the DOLMA-aware engine: "
+                    "roomy budget, tight budget (KV demoted to the pool), "
+                    "then online autoscaling under a drifting prompt mix.")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
-                    help="write a Chrome-trace JSON of the run (Perfetto)")
+                    help="write a Chrome-trace JSON of the run — wave spans "
+                         "on the wall clock, pool/fabric spans on the "
+                         "simulated clock (open at ui.perfetto.dev)")
     args = ap.parse_args()
     tel = Telemetry() if args.trace_out else None
     cfg = reduced_config(get_config("granite-8b"), dtype=jnp.float32,

@@ -186,6 +186,12 @@ class DolmaRuntime:
         lifetime_iters: float = float("inf"),
         pinned_local: bool = False,
     ) -> str:
+        """Register ``array`` as a data object before :meth:`finalize`.
+
+        ``reads_per_iter``/``writes_per_iter`` feed the placement policy's
+        hotness score; ``sim_bytes`` are scaled real bytes charged to the
+        fabric model. Returns the object name.
+        """
         if self._finalized:
             raise RuntimeError("alloc() after finalize(); DOLMA plans at startup")
         array = np.asarray(array)
@@ -555,15 +561,18 @@ class DolmaRuntime:
 
     # -- metrics ---------------------------------------------------------
     def elapsed_us(self) -> float:
+        """Simulated time (us) elapsed on this runtime's timeline."""
         return self.clock.now(self.timeline)
 
     def local_capacity_bytes(self) -> int:
+        """Configured local + cache + metadata region capacity in bytes."""
         return (
             self.local_region_bytes + self.cache_region_bytes
             + self.metadata_region_bytes
         )
 
     def peak_local_bytes(self) -> int:
+        """High-water local footprint in bytes (cache clipped to its region)."""
         return (
             self.local_region_bytes
             + min(self._peak_cached, self.cache_region_bytes)
@@ -624,6 +633,7 @@ class DolmaRuntime:
         return list(self._prediction)
 
     def stats(self) -> dict[str, Any]:
+        """Store traffic + runtime occupancy/prefetch/overlap counters."""
         s = self.store.stats()
         s.update(
             elapsed_us=self.elapsed_us(),

@@ -103,6 +103,7 @@ class Extent:
     replicas: list[int]  # node ids holding a copy; order = placement order
 
     def key(self, name: str) -> str:
+        """Per-extent store key: ``<object-name>#e<extent-index>``."""
         return f"{name}#e{self.index}"
 
 
@@ -173,9 +174,11 @@ class MemoryPool:
     # -- topology ----------------------------------------------------------
     @property
     def n_nodes(self) -> int:
+        """Total node count, alive or failed (ids are never reused)."""
         return len(self.nodes)
 
     def alive_nodes(self) -> list[RemoteStore]:
+        """Nodes currently serving traffic (failed ones filtered out)."""
         return [n for n in self.nodes if n.alive]
 
     @property
@@ -184,6 +187,7 @@ class MemoryPool:
         return [r for n in self.nodes if n.alive for r in n.resources]
 
     def node_of_extent(self, name: str, index: int) -> list[int]:
+        """Node ids holding replicas of extent ``index`` (placement order)."""
         return list(self._directory[name].extents[index].replicas)
 
     # -- allocation ---------------------------------------------------------
@@ -260,6 +264,7 @@ class MemoryPool:
         self._update_frag_gauges()
 
     def free(self, name: str) -> None:
+        """Release every replica extent of ``name``; no-op if absent."""
         po = self._directory.pop(name, None)
         if po is None:
             return
@@ -276,6 +281,7 @@ class MemoryPool:
         return list(self._directory)
 
     def nbytes(self, name: str) -> int:
+        """Logical payload size of ``name`` in bytes (KeyError if absent)."""
         return self._directory[name].nbytes
 
     def total_bytes(self) -> int:
@@ -476,6 +482,7 @@ class MemoryPool:
         return out.view(po.dtype).reshape(po.shape)
 
     def pending_until(self, name: str) -> float:
+        """Latest simulated time (us) an async write to ``name`` lands; 0 if idle."""
         po = self._directory.get(name)
         if po is None:
             return 0.0
@@ -487,6 +494,7 @@ class MemoryPool:
         return t
 
     def least_loaded_resource(self) -> FabricResource:
+        """The alive QP that frees up earliest on the simulated clock."""
         res = self.resources
         if not res:
             raise NodeFailure("no alive memory nodes in the pool")
@@ -648,12 +656,15 @@ class MemoryPool:
         raise NodeFailure("no alive memory nodes in the pool")
 
     def atomic_fetch_add(self, key: str, delta: int, *, timeline: str = "main") -> int:
+        """Serialized fetch-add on a small shared object; returns the old value."""
         return self._atomic_node(key).atomic_fetch_add(key, delta, timeline=timeline)
 
     def atomic_cas(self, key: str, expected: int, new: int, *, timeline: str = "main") -> bool:
+        """Compare-and-swap on a shared object; True iff the swap happened."""
         return self._atomic_node(key).atomic_cas(key, expected, new, timeline=timeline)
 
     def atomic_read(self, key: str) -> int:
+        """Read a shared atomic's current value (synchronous, serialized)."""
         return self._atomic_node(key).atomic_read(key)
 
     # -- failure injection + recovery ---------------------------------------
@@ -1160,6 +1171,28 @@ class MemoryPool:
         s["per_arena"] = self._allocator.arena_stats()
         return s
 
+    def arena_stats(self) -> dict[str, dict]:
+        """Per-arena (per-tenant) accounting across the pool.
+
+        Merges the slab allocator's per-arena physical view (live/held/frag
+        bytes, slab counts — replicas included) with the directory's logical
+        view (object count and logical bytes, replicas not double-counted).
+        Serving uses one arena per tenant (``alloc(client=tenant)``), so this
+        is the per-tenant occupancy surface the admission controller and the
+        multi-tenant benchmark report.
+        """
+        stats = self._allocator.arena_stats()
+        for po in self._directory.values():
+            entry = stats.setdefault(
+                po.arena, SlabAllocator._zero_stats()
+            )
+            entry["n_objects"] = entry.get("n_objects", 0) + 1
+            entry["logical_bytes"] = entry.get("logical_bytes", 0) + po.nbytes
+        for entry in stats.values():
+            entry.setdefault("n_objects", 0)
+            entry.setdefault("logical_bytes", 0)
+        return stats
+
     def _update_frag_gauges(self) -> None:
         if not self.telemetry.enabled:
             return
@@ -1171,9 +1204,15 @@ class MemoryPool:
                                  ns["internal_frag_bytes"], node=node.node_id)
             self.telemetry.gauge("pool.external_frag_bytes",
                                  ns["external_frag_bytes"], node=node.node_id)
+        for arena, s in self._allocator.arena_stats().items():
+            self.telemetry.gauge("pool.arena_live_bytes",
+                                 s["live_bytes"], arena=arena)
+            self.telemetry.gauge("pool.arena_frag_bytes",
+                                 s["frag_bytes"], arena=arena)
 
     # -- stats ---------------------------------------------------------------
     def stats(self) -> dict:
+        """Aggregate traffic/occupancy counters (bytes, ops, objects, nodes)."""
         per_node = [n.stats() for n in self.nodes]
         return {
             "bytes_read": sum(s["bytes_read"] for s in per_node),

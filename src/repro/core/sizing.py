@@ -71,6 +71,11 @@ class ObjectProfile:
     reuse_distance: int | None = None
 
     def to_data_object(self) -> DataObject:
+        """Lower this profile entry to a placement-policy ``DataObject``.
+
+        Shape is the flat real byte count; ``sim_bytes`` carries the
+        (possibly scaled) bytes the simulator charges per transfer.
+        """
         return DataObject(
             name=self.name,
             shape=(self.real_nbytes,),
@@ -104,10 +109,12 @@ class WorkloadProfile:
     source: str = ""
 
     def catalog(self) -> ObjectCatalog:
+        """Byte census of the recorded objects, ready for placement."""
         return ObjectCatalog(o.to_data_object() for o in self.objects.values())
 
     @property
     def peak_bytes(self) -> int:
+        """Sum of all recorded object sizes (simulated bytes)."""
         return sum(o.size_bytes for o in self.objects.values())
 
     def compute_us_per_step(self) -> float:
@@ -118,6 +125,7 @@ class WorkloadProfile:
 
     # -- (de)serialization for benchmark artifacts --------------------------
     def to_json(self) -> dict[str, Any]:
+        """Serialize to a plain dict (benchmark artifact round-trip)."""
         return {
             "objects": {n: dataclasses.asdict(o) for n, o in self.objects.items()},
             "steps": [[list(e) for e in step] for step in self.steps],
@@ -130,6 +138,7 @@ class WorkloadProfile:
 
     @classmethod
     def from_json(cls, d: dict[str, Any] | str) -> "WorkloadProfile":
+        """Inverse of :meth:`to_json`; accepts a dict or a JSON string."""
         if isinstance(d, str):
             d = json.loads(d)
         return cls(
@@ -485,6 +494,7 @@ class CostModel:
 
     @property
     def catalog(self) -> ObjectCatalog:
+        """The profile's object census used for candidate placements."""
         return self._catalog
 
     def predict_untiered(self, *, n_iters: int = 10) -> float:
@@ -799,6 +809,7 @@ def simulate_profile(
     steps = profile.steps or [[]]
 
     def body(runtime: "DolmaRuntime", it: int) -> None:
+        """Replay one recorded step's fetch/commit/compute events."""
         for op, val in steps[min(it, len(steps) - 1)]:
             if op == "fetch":
                 if val in payloads:
@@ -852,6 +863,7 @@ class SizingAdvice:
     marginal: list[MarginalCost]
 
     def summary(self) -> dict[str, Any]:
+        """Compact dict of the advice (bytes, fractions, degradation)."""
         return {
             "advised_budget_bytes": self.advised_budget_bytes,
             "advised_fraction": round(self.advised_fraction, 4),
@@ -995,6 +1007,138 @@ def advise_local_size(
     )
 
 
+# ---------------------------------------------------------------------------
+# multi-tenant advisories: per-tenant sizing + fleet-level feasibility
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TenantAdvice:
+    """One tenant's sizing advisory, as the admission controller prices it.
+
+    ``remote_kv_bytes`` is the KV working set (sim-scaled bytes) the advised
+    budget would push to the shared pool — the quantity fleet capacity
+    planning sums across tenants.
+    """
+
+    tenant: str
+    advice: SizingAdvice
+    remote_kv_bytes: int
+
+
+@dataclasses.dataclass
+class FleetFeasibility:
+    """Result of :func:`combined_feasibility` over all candidate tenants.
+
+    ``required_nodes`` is the unclamped node count the summed working sets
+    need at effective (frag-adjusted) capacity; ``target_nodes`` is that
+    clamped into ``[min_nodes, max_nodes]``. ``feasible`` is True iff the
+    clamp did not bind — i.e. the pool *can* hold every candidate tenant's
+    advised working set at once.
+    """
+
+    feasible: bool
+    target_nodes: int
+    required_nodes: int
+    total_remote_bytes: int
+    per_tenant_remote_bytes: dict[str, int]
+    effective_node_capacity_bytes: int
+
+
+def tenant_remote_kv_bytes(
+    profile: WorkloadProfile,
+    advice: SizingAdvice,
+    *,
+    n_nodes: int = 1,
+    stripe_bytes: int = DEFAULT_STRIPE_BYTES,
+    policy: PlacementPolicy | None = None,
+) -> int:
+    """KV-cache bytes the advised budget demotes to the remote pool.
+
+    Re-plans the tenant's catalog at ``advice.advised_budget_bytes`` and sums
+    the demoted objects of kind ``KV_CACHE`` (sim-scaled bytes) — the same
+    budget→working-set mapping the single-tenant autoscaler installs, exposed
+    per tenant so the fleet controller can sum it across arrivals.
+    """
+    catalog = profile.catalog()
+    plan = (policy or PlacementPolicy()).plan(
+        catalog,
+        local_budget_bytes=advice.advised_budget_bytes,
+        n_nodes=max(n_nodes, 1),
+        stripe_bytes=stripe_bytes,
+    )
+    return sum(
+        catalog[n].size_bytes
+        for n in plan.remote_names()
+        if catalog[n].kind is ObjectKind.KV_CACHE
+    )
+
+
+def advise_tenants(
+    profiles: dict[str, WorkloadProfile],
+    degradation_target: float = DEFAULT_DEGRADATION_TARGET,
+    *,
+    config: ModelConfig | None = None,
+    stripe_bytes: int = DEFAULT_STRIPE_BYTES,
+    **config_kwargs: Any,
+) -> dict[str, TenantAdvice]:
+    """Run :func:`advise_local_size` independently for every tenant.
+
+    Each tenant is priced against the *same* SLO (per-tenant, not
+    aggregate): the advisory answers "what local working set does this
+    tenant need so *its own* re-simulated degradation stays under the
+    target", and :class:`TenantAdvice.remote_kv_bytes` is its contribution
+    to shared-pool demand. Tenants with empty profiles are skipped.
+    """
+    cfg = config or ModelConfig(**config_kwargs)
+    out: dict[str, TenantAdvice] = {}
+    for tenant, profile in profiles.items():
+        if not profile.objects:
+            continue
+        advice = advise_local_size(profile, degradation_target, config=cfg)
+        out[tenant] = TenantAdvice(
+            tenant=tenant,
+            advice=advice,
+            remote_kv_bytes=tenant_remote_kv_bytes(
+                profile, advice, n_nodes=cfg.n_nodes,
+                stripe_bytes=stripe_bytes,
+            ),
+        )
+    return out
+
+
+def combined_feasibility(
+    per_tenant_remote_bytes: dict[str, int],
+    *,
+    replication: int = 1,
+    node_capacity_bytes: int,
+    frag_bytes_per_node: float = 0.0,
+    min_nodes: int = 1,
+    max_nodes: int | None = None,
+) -> FleetFeasibility:
+    """Can one shared pool hold every candidate tenant's advised working set?
+
+    Sums the per-tenant advised remote KV bytes (× replication), divides by
+    *effective* per-node capacity (raw minus measured allocator
+    fragmentation), and reports whether the resulting node count fits under
+    ``max_nodes``. This is the fleet-level check the admission controller
+    runs before committing: when it fails, some tenant must be shed or kept
+    queued — Wahlgren et al.'s point that admission must come from the
+    quantitative model, not static quotas.
+    """
+    eff = effective_node_capacity(node_capacity_bytes, frag_bytes_per_node)
+    total = sum(per_tenant_remote_bytes.values())
+    required = -(-total * max(replication, 1) // eff) if total else 0
+    required = max(required, min_nodes)
+    target = min(required, max_nodes) if max_nodes is not None else required
+    return FleetFeasibility(
+        feasible=required == target,
+        target_nodes=target,
+        required_nodes=required,
+        total_remote_bytes=total,
+        per_tenant_remote_bytes=dict(per_tenant_remote_bytes),
+        effective_node_capacity_bytes=eff,
+    )
+
+
 def effective_node_capacity(
     node_capacity_bytes: int, frag_bytes_per_node: float = 0.0
 ) -> int:
@@ -1032,6 +1176,7 @@ __all__ = [
     "CostModel",
     "CurvePoint",
     "DEFAULT_DEGRADATION_TARGET",
+    "FleetFeasibility",
     "MODEL_TOLERANCE",
     "MarginalCost",
     "ModelConfig",
@@ -1039,10 +1184,14 @@ __all__ = [
     "Prediction",
     "RollingProfile",
     "SizingAdvice",
+    "TenantAdvice",
     "WorkloadProfile",
     "advise_local_size",
+    "advise_tenants",
+    "combined_feasibility",
     "effective_node_capacity",
     "pool_nodes_needed",
     "simulate_profile",
     "synthetic_profile",
+    "tenant_remote_kv_bytes",
 ]

@@ -76,6 +76,7 @@ class SpanEvent:
 
     @property
     def dur_us(self) -> float:
+        """Span duration in microseconds."""
         return self.end_us - self.begin_us
 
 
@@ -103,6 +104,7 @@ class MetricsSnapshot:
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict[str, Any]:
+        """Serialize with sorted keys (stable diff/regression artifacts)."""
         return {
             "counters": dict(sorted(self.counters.items())),
             "gauges": dict(sorted(self.gauges.items())),
@@ -111,6 +113,7 @@ class MetricsSnapshot:
 
     @classmethod
     def from_json(cls, d: dict[str, Any]) -> "MetricsSnapshot":
+        """Rebuild a snapshot from its :meth:`to_json` dict."""
         return cls(
             counters=dict(d.get("counters", {})),
             gauges=dict(d.get("gauges", {})),
@@ -269,10 +272,12 @@ class Telemetry:
 
     # -- queries -----------------------------------------------------------
     def counter(self, name: str, **labels: Any) -> float:
+        """Current value of a counter under exactly these labels (0 if unset)."""
         with self._lock:
             return self.counters.get(_key(name, labels), 0.0)
 
     def tracks(self) -> list[str]:
+        """All track names that recorded a span or instant, sorted."""
         with self._lock:
             seen = {s.track for s in self.spans}
             seen.update(i.track for i in self.instants)
@@ -280,6 +285,7 @@ class Telemetry:
 
     def spans_on(self, track: str,
                  cats: tuple[str, ...] | None = None) -> list[SpanEvent]:
+        """Spans recorded on ``track``, optionally filtered by category."""
         with self._lock:
             return [s for s in self.spans
                     if s.track == track and (cats is None or s.cat in cats)]
@@ -300,6 +306,7 @@ class Telemetry:
         return max((s.end_us for s in spans), default=0.0)
 
     def reset(self) -> None:
+        """Drop all recorded events, counters, gauges, and the wall origin."""
         with self._lock:
             self.spans.clear()
             self.instants.clear()

@@ -62,6 +62,15 @@ TieringMode = Literal["none", "host_offload", "fsdp_stream"]
 
 @dataclasses.dataclass(frozen=True)
 class TieringConfig:
+    """How params/opt-state tier out of HBM during the layer scan.
+
+    ``local_fraction`` is the share of (param + opt state) bytes kept
+    resident (or ``"auto"`` to let the sizing solver pick it);
+    ``degradation_target`` is the slowdown fraction the solver sizes for
+    (0.16 = paper knee). ``prefetch`` enables the dual-buffer weight
+    fetch one layer ahead of compute.
+    """
+
     mode: TieringMode = "fsdp_stream"
     # Fraction of (param + opt state) bytes allowed to stay in HBM; "auto"
     # defers to the cost-model sizing solver (plan_for_params needs a
@@ -347,6 +356,7 @@ def tiered_scan(
     if not remat:
         if not prefetch:
             def body(c, i):
+                """Demand-fetch scan step: fetch layer ``i``, then compute."""
                 return layer_fn(c, fetch_fn(stacked_params, i)), None
 
             carry, _ = jax.lax.scan(
@@ -357,6 +367,7 @@ def tiered_scan(
         p0 = fetch_fn(stacked_params, jnp.asarray(0, jnp.int32))
 
         def body(state, i):
+            """Dual-buffer scan step: post fetch ``i+1``, compute layer ``i``."""
             c, cur = state
             # issue the next fetch *before* compute: no data dependence
             # between them, so the scheduler overlaps DMA/all-gather with
@@ -381,12 +392,14 @@ def tiered_scan(
     # per-layer checkpoint; the fetch sits inside the boundary so the weight
     # gather is re-issued (not stored) when this layer's backward recomputes
     def layer_at(c, i):
+        """One rematerialized layer, fetching its own weights by index."""
         return layer_fn(grad_safe_barrier(c), fetch_fn(stacked_params, i))
 
     layer_at = jax.checkpoint(layer_at, policy=policy)
 
     # prefetch variant: current weights arrive via the (inner) carry
     def layer_with(c, p):
+        """One rematerialized layer, weights arriving via the scan carry."""
         return layer_fn(grad_safe_barrier(c), p)
 
     layer_with = jax.checkpoint(layer_with, policy=policy)
@@ -395,6 +408,7 @@ def tiered_scan(
         """Layers [start, start + n_inner) — runs inside one remat boundary."""
         if not prefetch or n_inner == 1:
             def body(cc, j):
+                """Demand-fetch step inside the remat block."""
                 return layer_at(cc, start + j), None
 
             c, _ = jax.lax.scan(
@@ -407,6 +421,7 @@ def tiered_scan(
         p0 = fetch_fn(stacked_params, start)
 
         def body(state, j):
+            """Dual-buffer step inside the remat block (fetches recomputed)."""
             cc, cur = state
             nxt = fetch_fn(
                 stacked_params,
@@ -424,6 +439,7 @@ def tiered_scan(
         block_fn = jax.checkpoint(block_fn, policy=policy)
 
     def outer_body(c, g):
+        """Run remat block ``g`` and re-place its saved carry off-HBM."""
         c = block_fn(c, (g * n_inner).astype(jnp.int32))
         if remote_carry_fn is not None:
             c = remote_carry_fn(c)
@@ -463,11 +479,13 @@ def remote_carry_placer(
     host = config.mode != "none" and supports_host_offload_spmd(mesh)
 
     def spec_of(leaf) -> P:
+        """Logical partition spec of a carry leaf (default: replicated)."""
         if spec_fn is not None:
             return spec_fn(leaf)
         return P(*([None] * jnp.ndim(leaf)))
 
     def place_leaf(leaf):
+        """Constrain one carry leaf to the remote tier (host or peer HBM)."""
         if jnp.ndim(leaf) < 2:  # scalars / small aux stay local
             return leaf
         spec = spec_of(leaf)

@@ -150,33 +150,58 @@ def gqa_decode_step(
     pos: jax.Array,
     cfg: ModelConfig,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One-token decode. x: (B,1,d); cache: (B,S_cache,KV,Dh); pos: scalar.
+    """One-token decode. x: (B,1,d); cache: (B,S_cache,KV,Dh); pos: scalar
+    or per-lane ``(B,)`` vector.
 
     For SWA the cache is a ring buffer of width ``sliding_window`` indexed by
     ``pos % window``; otherwise the cache holds the full context and new KV is
-    written at ``pos``.
+    written at ``pos``. A per-lane ``pos`` vector decodes every batch lane at
+    its own position (the continuous-batching path): lane *b*'s new KV lands
+    at ``pos[b]`` and its causal mask covers only ``idx <= pos[b]`` — each
+    lane's arithmetic is independent of the others, so results are
+    bit-identical to running that lane alone at the same batch shape.
     """
     B = x.shape[0]
     H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     S_cache = cache_k.shape[1]
+    per_lane = jnp.ndim(pos) > 0
+    positions = jnp.reshape(pos, (B, 1)) if per_lane else jnp.full((B, 1), pos)
     q = _split_heads(x @ p["wq"], H, Dh)
-    q = rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    q = rope(q, positions, cfg.rope_theta)
     k_new = _split_heads(x @ p["wk"], KV, Dh)
-    k_new = rope(k_new, jnp.full((B, 1), pos), cfg.rope_theta)
+    k_new = rope(k_new, positions, cfg.rope_theta)
     v_new = _split_heads(x @ p["wv"], KV, Dh)
 
-    slot = pos % S_cache if cfg.sliding_window else pos
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    idx = jnp.arange(S_cache)
+    if per_lane:
+        lane_pos = positions[:, 0]
+        slot = lane_pos % S_cache if cfg.sliding_window else lane_pos
+        lanes = jnp.arange(B)
+        cache_k = cache_k.at[lanes, slot].set(k_new[:, 0])
+        cache_v = cache_v.at[lanes, slot].set(v_new[:, 0])
+        if cfg.sliding_window:
+            valid = (idx[None, :] <= slot[:, None]) | (
+                lane_pos[:, None] >= S_cache
+            )
+        else:
+            valid = idx[None, :] <= lane_pos[:, None]
+        mask = valid[:, None, None, :]
+    else:
+        slot = pos % S_cache if cfg.sliding_window else pos
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new, slot, axis=1
+        )
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new, slot, axis=1
+        )
+        if cfg.sliding_window:
+            valid = (idx <= slot) | (pos >= S_cache)  # ring: all valid once wrapped
+        else:
+            valid = idx <= pos
+        mask = valid[None, None, None, :]
     cache_k = constrain(cache_k, "batch", "kv_len", "kv_heads", None)
     cache_v = constrain(cache_v, "batch", "kv_len", "kv_heads", None)
 
-    idx = jnp.arange(S_cache)
-    if cfg.sliding_window:
-        valid = (idx <= slot) | (pos >= S_cache)  # ring: all valid once wrapped
-    else:
-        valid = idx <= pos
-    mask = valid[None, None, None, :]
     out = _sdpa(q, cache_k, cache_v, mask, cfg)
     return out.reshape(B, 1, H * Dh) @ p["wo"], cache_k, cache_v
 

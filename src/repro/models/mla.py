@@ -85,18 +85,30 @@ def mla_decode_step(
     pos: jax.Array,
     cfg: ModelConfig,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Absorbed one-token decode against the compressed-latent cache."""
+    """Absorbed one-token decode against the compressed-latent cache.
+
+    ``pos`` is a scalar (whole batch at one position) or a per-lane ``(B,)``
+    vector (continuous batching: each lane's latent lands at its own slot
+    and is masked to its own prefix).
+    """
     B = x.shape[0]
     H = cfg.n_heads
     nope, rdim, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     kr = cfg.kv_lora_rank
     S_max = cache_c.shape[1]
 
-    positions = jnp.full((B, 1), pos)
+    per_lane = jnp.ndim(pos) > 0
+    positions = (jnp.reshape(pos, (B, 1)) if per_lane
+                 else jnp.full((B, 1), pos))
     q_nope, q_rope = _project_q(p, x, cfg, positions)  # (B,1,H,*)
     c_new, kr_new = _project_kv_latent(p, x, cfg, positions)
-    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_new, pos, axis=1)
-    cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_new, pos, axis=1)
+    if per_lane:
+        lanes = jnp.arange(B)
+        cache_c = cache_c.at[lanes, positions[:, 0]].set(c_new[:, 0])
+        cache_kr = cache_kr.at[lanes, positions[:, 0]].set(kr_new[:, 0])
+    else:
+        cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_new, pos, axis=1)
+        cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_new, pos, axis=1)
     cache_c = constrain(cache_c, "batch", "kv_len", None)
     cache_kr = constrain(cache_kr, "batch", "kv_len", None)
 
@@ -110,7 +122,11 @@ def mla_decode_step(
         jnp.einsum("bqhl,bsl->bhqs", q_c, cache_c)
         + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_kr)
     ).astype(jnp.float32) * scale
-    valid = (jnp.arange(S_max) <= pos)[None, None, None, :]
+    if per_lane:
+        valid = (jnp.arange(S_max)[None, :]
+                 <= positions)[:, None, None, :]  # (B,1,1,S)
+    else:
+        valid = (jnp.arange(S_max) <= pos)[None, None, None, :]
     scores = jnp.where(valid, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
 

@@ -1,3 +1,19 @@
 from repro.serving.engine import AutoscaleConfig, EngineConfig, ServingEngine
+from repro.serving.scheduler import (
+    ContinuousScheduler,
+    Request,
+    RequestQueue,
+    SchedulerConfig,
+    TenantState,
+)
 
-__all__ = ["AutoscaleConfig", "EngineConfig", "ServingEngine"]
+__all__ = [
+    "AutoscaleConfig",
+    "ContinuousScheduler",
+    "EngineConfig",
+    "Request",
+    "RequestQueue",
+    "SchedulerConfig",
+    "ServingEngine",
+    "TenantState",
+]

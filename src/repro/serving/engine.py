@@ -70,8 +70,54 @@ class AutoscaleConfig:
     sizing_iters: int = 4          # horizon the cost model prices
 
 
+def kv_wave_profile(
+    catalog: ObjectCatalog, frac: float, compute_us: float
+) -> tuple[list[tuple[str, Any]], dict[str, ObjectProfile]]:
+    """Build one wave of KV fetch/commit traffic for a rolling profile.
+
+    ``frac`` is the wave's live KV occupancy (batch x sequence fill, in
+    ``[0, 1]``): each KV-cache object's touched bytes scale with it while
+    params are read in full every step. ``compute_us`` is the modeled decode
+    compute the wave charges (deterministic, so advice is machine-
+    independent). Events mirror the runtime convention — interleaved
+    ``fetch``/``compute`` slices, then ``commit`` for written tiers. Shared
+    by the single-tenant autoscaler (:meth:`ServingEngine._record_wave`) and
+    the multi-tenant scheduler's per-tenant profiles.
+    """
+    frac = min(max(frac, 0.0), 1.0)
+    slice_us = compute_us / max(len(catalog), 1)
+    rows: dict[str, ObjectProfile] = {}
+    events: list[tuple[str, Any]] = []
+    committed: list[str] = []
+    for obj in catalog:
+        is_cache = obj.kind is ObjectKind.KV_CACHE
+        touched = (max(int(obj.size_bytes * frac), 1) if is_cache
+                   else obj.size_bytes)
+        rows[obj.name] = ObjectProfile(
+            name=obj.name,
+            size_bytes=touched,
+            real_nbytes=touched,
+            kind=obj.kind.value,
+            n_reads=1,
+            n_writes=1 if is_cache else 0,
+            lifetime_iters=math.inf,
+            n_fetch_events=1,
+            n_commit_events=1 if is_cache else 0,
+        )
+        events.append(("fetch", obj.name))
+        events.append(("compute", slice_us))
+        if is_cache:
+            committed.append(obj.name)
+    for name in committed:
+        events.append(("commit", name))
+    return events, rows
+
+
 @dataclasses.dataclass
 class EngineConfig:
+    """Decode-engine knobs: slot pool size, context length, HBM budget,
+    and the optional KV-overflow pool / autoscaler configuration."""
+
     max_batch: int = 8
     max_len: int = 512
     hbm_budget_bytes: int | None = None   # None = no cache tiering pressure
@@ -86,6 +132,19 @@ class EngineConfig:
 
 
 class ServingEngine:
+    """Batched greedy-decode server over a tiered param/KV object catalog.
+
+    The engine catalogs parameters and the decode KV cache as DOLMA data
+    objects, runs the §4.1 placement policy against ``hbm_budget_bytes``
+    (bytes), and serves either synchronous ``generate()`` waves or — via
+    ``enable_lane_decode()`` — per-lane continuous batching for the §12
+    multi-tenant scheduler. Demoted cache tiers overflow into a striped
+    ``MemoryPool``; with ``autoscale=`` set, each wave is profiled and the
+    pool is resized online from the sizing advisor (DESIGN.md §8). Decode
+    runs on the wall clock (real jax compute, microseconds); pool/fabric
+    traffic is charged to the shared simulated clock.
+    """
+
     def __init__(self, cfg: ModelConfig, params: Any, engine_cfg: EngineConfig,
                  *, telemetry: Telemetry | None = None):
         self.cfg = cfg
@@ -232,6 +291,164 @@ class ServingEngine:
             self.cfg, self.ecfg.max_batch, self.ecfg.max_len
         )
 
+    # -- continuous-batching lane API (DESIGN.md §12) ------------------------
+    @property
+    def lane_mode(self) -> bool:
+        """True once :meth:`enable_lane_decode` switched the cache to
+        per-lane decode positions (the continuous-batching step path)."""
+        return getattr(self, "_lane_mode", False)
+
+    def enable_lane_decode(self) -> None:
+        """Switch the decode cache to per-lane positions (phase-split path).
+
+        After this call every batch lane decodes at its own position: the
+        cache's scalar ``pos`` becomes a ``(max_batch,)`` vector, and
+        :meth:`decode_lanes` / :meth:`reset_lanes` drive the slot pool with
+        requests joining and retiring mid-stream (no wave barriers). The
+        engine's own wave-oriented ``generate()``/autoscale loop must not be
+        mixed with lane mode — the :class:`~repro.serving.scheduler.
+        ContinuousScheduler` owns admission and profiling instead. Generic
+        whole-cache pool overflow entries are dropped here; per-tenant KV
+        slices (:meth:`offload_tenant_kv`) replace them.
+        """
+        if self.ecfg.autoscale is not None:
+            raise ValueError(
+                "lane mode and the engine's single-tenant autoscaler are "
+                "mutually exclusive; drive admission via ContinuousScheduler"
+            )
+        if "pos" not in self.cache:
+            raise ValueError("lane decode requires a decoder-style cache "
+                             "with a 'pos' entry")
+        self.cache = dict(self.cache)
+        self.cache["pos"] = jnp.zeros((self.ecfg.max_batch,), jnp.int32)
+        self._lane_mode = True
+        if self.pool is not None:
+            for name in self.pool.names():
+                if name.startswith("cache"):
+                    self.pool.free(name)
+
+    def ensure_pool(self) -> MemoryPool | None:
+        """Create the KV-overflow pool at the configured initial size if it
+        does not exist yet; returns it (or None when pooling is disabled)."""
+        if self.pool is None and self._pool_target_nodes:
+            self.pool = MemoryPool(
+                self._pool_target_nodes,
+                replication=self.ecfg.pool_replication,
+                stripe_bytes=self.ecfg.pool_stripe_bytes,
+                telemetry=self.telemetry,
+            )
+        return self.pool
+
+    def lane_positions(self) -> np.ndarray:
+        """Per-lane decode positions as a host ``(max_batch,)`` int array."""
+        return np.array(self.cache["pos"]).reshape(-1)
+
+    def decode_lanes(self, tokens: np.ndarray) -> tuple[np.ndarray, float]:
+        """One shared batched decode step across all lanes (phase-split).
+
+        ``tokens`` is the per-lane feed, shape ``(max_batch,)``: a prompt
+        token for lanes in prefill, the last sampled token for lanes in
+        decode, anything for free lanes (their output is discarded — each
+        lane's arithmetic is independent of the others). Returns the greedy
+        next token per lane and the wall-clock step latency in us.
+        """
+        if not self.lane_mode:
+            raise RuntimeError("call enable_lane_decode() first")
+        toks = np.asarray(tokens, np.int32).reshape(self.ecfg.max_batch, 1)
+        t0 = time.perf_counter()
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(toks))
+        cur = jnp.argmax(
+            logits[:, :, : self.cfg.vocab_size], axis=-1
+        ).astype(jnp.int32)
+        nxt = np.asarray(cur).reshape(-1)
+        step_us = (time.perf_counter() - t0) * 1e6
+        return nxt, step_us
+
+    def reset_lanes(self, lanes: list[int]) -> None:
+        """Zero the given lanes' cache slices and positions.
+
+        Called when a request joins (fresh context) and when it retires
+        (drop its KV occupancy); other lanes are untouched, so in-flight
+        requests never observe the reset.
+        """
+        if not self.lane_mode:
+            raise RuntimeError("call enable_lane_decode() first")
+        if not lanes:
+            return
+        idx = jnp.asarray(sorted(lanes))
+        cache = dict(self.cache)
+        for key, leaf in cache.items():
+            if key == "pos":
+                cache[key] = leaf.at[idx].set(0)
+            else:
+                cache[key] = leaf.at[:, idx].set(0)
+        self.cache = cache
+
+    def lane_kv_bytes(self, lanes: list[int]) -> int:
+        """KV-cache bytes held live by these lanes at their current decode
+        positions — the per-tenant occupancy the admission controller sums
+        (a lane at position *p* holds ``p / max_len`` of its cache share)."""
+        if not lanes:
+            return 0
+        pos = self.lane_positions()
+        total = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.cache):
+            name = "cache" + jax.tree_util.keystr(path)
+            if name == "cache['pos']":
+                continue
+            per_lane = (leaf.size * leaf.dtype.itemsize) // self.ecfg.max_batch
+            for lane in lanes:
+                frac = min(int(pos[lane]) / self.ecfg.max_len, 1.0)
+                total += int(per_lane * frac)
+        return total
+
+    def tenant_kv_names(self, tenant: str) -> list[str]:
+        """Pool object names holding this tenant's offloaded KV slices."""
+        if self.pool is None:
+            return []
+        prefix = f"kv:{tenant}:"
+        return [n for n in self.pool.names() if n.startswith(prefix)]
+
+    def offload_tenant_kv(self, tenant: str, lanes: list[int]) -> None:
+        """Write this tenant's demoted KV slices into its own pool arena.
+
+        The serving analogue of DOLMA's async demotion, per tenant: each
+        demoted cache tier is sliced to the tenant's lanes and written into
+        the shared pool under the tenant's allocator arena
+        (``alloc(client=tenant)`` — slab isolation per ISSUE 7), so arena
+        accounting and shed/retire cleanup are exact per tenant. Existing
+        entries of matching size are overwritten in place; shape changes
+        (lane count drift) free + re-alloc.
+        """
+        if not lanes or not self._pool_target_nodes:
+            return
+        demoted = set(self._demoted_cache_names())
+        demoted.discard("cache['pos']")
+        if not demoted:
+            return
+        self.ensure_pool()
+        idx = sorted(lanes)
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.cache):
+            name = "cache" + jax.tree_util.keystr(path)
+            if name not in demoted:
+                continue
+            data = np.ascontiguousarray(np.asarray(leaf)[:, idx])
+            key = f"kv:{tenant}:{name}"
+            if key in self.pool and self.pool.nbytes(key) == data.nbytes:
+                self.pool.write(key, data)
+            else:
+                if key in self.pool:
+                    self.pool.free(key)
+                self.pool.alloc(key, data, client=tenant)
+
+    def free_tenant_kv(self, tenant: str) -> None:
+        """Drop every pool entry of this tenant's KV arena (request
+        retirement / tenant idle): extents are released back to the slab
+        allocator, leaving no orphans (``check_no_orphans()`` stays clean)."""
+        for key in self.tenant_kv_names(tenant):
+            self.pool.free(key)
+
     # -- the online autoscaler (DESIGN.md §8) -------------------------------
     def _record_wave(self, batch: int, seq_len: int) -> None:
         """Append one wave's KV traffic to the rolling profile.
@@ -247,40 +464,22 @@ class ServingEngine:
             batch / self.ecfg.max_batch
         )
         compute_us = batch * seq_len * acfg.compute_us_per_token
-        slice_us = compute_us / max(len(self.catalog), 1)
-        rows: dict[str, ObjectProfile] = {}
-        events: list[tuple[str, Any]] = []
-        committed: list[str] = []
-        for obj in self.catalog:
-            is_cache = obj.kind is ObjectKind.KV_CACHE
-            touched = (max(int(obj.size_bytes * frac), 1) if is_cache
-                       else obj.size_bytes)
-            rows[obj.name] = ObjectProfile(
-                name=obj.name,
-                size_bytes=touched,
-                real_nbytes=touched,
-                kind=obj.kind.value,
-                n_reads=1,
-                n_writes=1 if is_cache else 0,
-                lifetime_iters=math.inf,
-                n_fetch_events=1,
-                n_commit_events=1 if is_cache else 0,
-            )
-            events.append(("fetch", obj.name))
-            events.append(("compute", slice_us))
-            if is_cache:
-                committed.append(obj.name)
-        for name in committed:
-            events.append(("commit", name))
+        events, rows = kv_wave_profile(self.catalog, frac, compute_us)
         self._rolling.append_wave(events, rows)
         kv_bytes = sum(p.size_bytes for p in rows.values()
                        if p.kind == ObjectKind.KV_CACHE.value)
         self.telemetry.gauge("serving.kv_occupancy_bytes", kv_bytes)
         self._wave += 1
 
-    def _resize_pool(self, target: int) -> dict | None:
+    def resize_pool(self, target: int) -> dict | None:
         """Grow/shrink the pool toward ``target`` alive nodes in one
-        migration pass; returns its stats (extents moved, bytes, sim-time)."""
+        make-before-break migration pass; returns the migration stats
+        (extents moved, bytes, simulated time) or None if already sized.
+        Used by both the single-tenant autoscaler and the multi-tenant
+        scheduler's admission controller."""
+        return self._resize_pool(target)
+
+    def _resize_pool(self, target: int) -> dict | None:
         if self.pool is None:
             return None
         alive = sorted(n.node_id for n in self.pool.alive_nodes())
@@ -462,6 +661,7 @@ class ServingEngine:
         return np.concatenate(out, axis=1)[:B]
 
     def stats(self) -> dict:
+        """Snapshot cache footprint (bytes), placement, pool, and autoscale log."""
         return {
             "cache_bytes": sum(
                 x.size * x.dtype.itemsize for x in jax.tree.leaves(self.cache)
