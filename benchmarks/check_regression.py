@@ -34,17 +34,25 @@ Three committed perf contracts are enforced:
   tenant's re-simulated degradation under the committed target, and checks
   per-tenant step latency (real wall-clock) only against a wide
   ``--churn-tolerance``-style bound.
+* ``BENCH_pr10.json`` — the expert-paging contract
+  (``benchmarks/fig_expert_paging.py --bench-json``). The gate requires
+  paged MoE serving to stay bit-identical to the untiered engine, holds
+  each config's expert hit-rate at/above the committed floor and its
+  simulated degradation at/below the committed knee, and checks that the
+  HBM oversubscription factor has not dropped below the committed floor.
 
-CI runs all five in the ``bench-regression`` job; locally the same way:
+CI runs all six in the ``bench-regression`` job; locally the same way:
 
     PYTHONPATH=src python -m benchmarks.run --bench-json /tmp/bench.json
     PYTHONPATH=src python -m benchmarks.fig_autoscale --bench-json /tmp/pr5.json
     PYTHONPATH=src python -m benchmarks.fig_alloc_churn --bench-json /tmp/pr7.json
     PYTHONPATH=src python -m benchmarks.fig_measured_overlap --bench-json /tmp/pr8.json
     PYTHONPATH=src python -m benchmarks.fig_serving_mt --bench-json /tmp/pr9.json
+    PYTHONPATH=src python -m benchmarks.fig_expert_paging --bench-json /tmp/pr10.json
     python -m benchmarks.check_regression --current /tmp/bench.json \\
         --pr5-current /tmp/pr5.json --pr7-current /tmp/pr7.json \\
-        --pr8-current /tmp/pr8.json --pr9-current /tmp/pr9.json
+        --pr8-current /tmp/pr8.json --pr9-current /tmp/pr9.json \\
+        --pr10-current /tmp/pr10.json
 """
 from __future__ import annotations
 
@@ -57,6 +65,7 @@ DEFAULT_PR5_BASELINE = "BENCH_pr5.json"
 DEFAULT_PR7_BASELINE = "BENCH_pr7.json"
 DEFAULT_PR8_BASELINE = "BENCH_pr8.json"
 DEFAULT_PR9_BASELINE = "BENCH_pr9.json"
+DEFAULT_PR10_BASELINE = "BENCH_pr10.json"
 DEFAULT_TOLERANCE = 0.10
 DEFAULT_LATENCY_TOLERANCE = 4.0
 DEFAULT_CHURN_TOLERANCE = 0.50
@@ -265,6 +274,52 @@ def compare_serving_mt(baseline: dict, current: dict,
     return problems
 
 
+def compare_expert_paging(baseline: dict, current: dict) -> list[str]:
+    """Gate the expert-paging contract (empty = pass).
+
+    Bit-identity of paged serving is a hard invariant; per config the
+    measured hit-rate must stay at/above the committed floor, simulated
+    degradation at/below the committed target, and HBM oversubscription
+    at/above the committed floor (all deterministic: modeled compute
+    charges, seeded prompts and router skew).
+    """
+    problems: list[str] = []
+    for key in ("hit_rate_floor", "degradation_target",
+                "oversubscription_floor", "configs"):
+        if key not in baseline:
+            problems.append(f"expert_paging baseline missing {key!r}")
+        if key not in current:
+            problems.append(f"expert_paging current run missing {key!r}")
+    if problems:
+        return problems
+    missing = sorted(set(baseline["configs"]) - set(current["configs"]))
+    if missing:
+        problems.append(
+            f"expert_paging: configs missing from current run: {missing}")
+    hit_floor = baseline["hit_rate_floor"]
+    target = baseline["degradation_target"]
+    oversub_floor = baseline["oversubscription_floor"]
+    for arch, row in current["configs"].items():
+        if row.get("bit_identical") is not True:
+            problems.append(
+                f"expert_paging: {arch} paged tokens no longer bit-identical "
+                f"to the untiered engine")
+        if row.get("hit_rate", 0.0) < hit_floor:
+            problems.append(
+                f"expert_paging: {arch} hit-rate {row.get('hit_rate'):.3f} "
+                f"< committed floor {hit_floor}")
+        if row.get("degradation", float("inf")) > target + 1e-9:
+            problems.append(
+                f"expert_paging: {arch} degradation "
+                f"{row.get('degradation'):.3f} > committed target {target}")
+        if row.get("oversubscription", 0.0) < oversub_floor:
+            problems.append(
+                f"expert_paging: {arch} oversubscription "
+                f"{row.get('oversubscription'):.2f}x < committed floor "
+                f"{oversub_floor}x")
+    return problems
+
+
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
@@ -317,6 +372,17 @@ def main(argv: list[str] | None = None) -> int:
         help="fresh fig_serving_mt --bench-json output to check",
     )
     parser.add_argument(
+        "--pr10-baseline",
+        default=DEFAULT_PR10_BASELINE,
+        help=f"committed expert-paging baseline "
+             f"(default {DEFAULT_PR10_BASELINE})",
+    )
+    parser.add_argument(
+        "--pr10-current",
+        default=None,
+        help="fresh fig_expert_paging --bench-json output to check",
+    )
+    parser.add_argument(
         "--tolerance",
         type=float,
         default=DEFAULT_TOLERANCE,
@@ -340,9 +406,9 @@ def main(argv: list[str] | None = None) -> int:
     args = parser.parse_args(argv)
     if (args.current is None and args.pr5_current is None
             and args.pr7_current is None and args.pr8_current is None
-            and args.pr9_current is None):
+            and args.pr9_current is None and args.pr10_current is None):
         parser.error("pass --current, --pr5-current, --pr7-current, "
-                     "--pr8-current, and/or --pr9-current")
+                     "--pr8-current, --pr9-current, and/or --pr10-current")
 
     problems: list[str] = []
     n_checked = 0
@@ -416,6 +482,30 @@ def main(argv: list[str] | None = None) -> int:
             f"{pr9_current.get('max_admitted_degradation', float('nan')):.3f},"
             f"nodes={pr9_current.get('nodes_trajectory')} "
             f"shed={pr9_current.get('shed_events')}"
+        )
+
+    if args.pr10_current is not None:
+        with open(args.pr10_baseline) as f:
+            pr10_baseline = json.load(f)
+        with open(args.pr10_current) as f:
+            pr10_current = json.load(f)
+        problems += compare_expert_paging(pr10_baseline, pr10_current)
+        n_checked += 1
+        worst_hit = min(
+            (row.get("hit_rate", float("nan"))
+             for row in pr10_current.get("configs", {}).values()),
+            default=float("nan"),
+        )
+        worst_deg = max(
+            (row.get("degradation", float("nan"))
+             for row in pr10_current.get("configs", {}).values()),
+            default=float("nan"),
+        )
+        print(
+            f"check_regression/expert_paging,{worst_hit:.3f},"
+            f"floor={pr10_baseline.get('hit_rate_floor')} "
+            f"max_degradation={worst_deg:.3f} "
+            f"target={pr10_baseline.get('degradation_target')}"
         )
 
     if problems:

@@ -37,6 +37,10 @@ class ObjectKind(enum.Enum):
     INPUT = "input"
     OUTPUT = "output"
     SCRATCH = "scratch"
+    # one routed expert's (w_gate, w_up, w_down) slab: a PARAM by lifetime
+    # but cold-skewed by access (top-k of E per token), paged through the
+    # pool by the serving engine's expert pager (ISSUE 10)
+    EXPERT = "expert"
 
 
 # The paper's small/large boundary (§3.2, §4.1): one OS page.
@@ -57,6 +61,11 @@ class DataObject:
     # math.inf = lives for the whole program (params, persistent state).
     lifetime_iters: float = math.inf
     pinned_local: bool = False  # hard pin (e.g. metadata region, RNG keys)
+    # the mirror pin: the object's authoritative copy lives in the remote
+    # pool by construction (paged expert slabs); the placement policy
+    # demotes it unconditionally and only its *resident* fraction counts
+    # against the local budget
+    pinned_remote: bool = False
     # simulated logical size (paper-scale modeling); 0 => real array size
     sim_bytes: int = 0
 

@@ -22,7 +22,7 @@ import dataclasses
 from typing import Iterable, Mapping
 
 from repro.core.metadata import Tier
-from repro.core.objects import DataObject, ObjectCatalog
+from repro.core.objects import DataObject, ObjectCatalog, ObjectKind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,15 +131,61 @@ def diff_plans(old: PlacementPlan, new: PlacementPlan) -> PlanDiff:
 
 
 def demotion_order(objects: Iterable[DataObject]) -> list[DataObject]:
-    """Paper §4.1 ranking: size desc, then accesses asc, then write-ratio desc."""
+    """Paper §4.1 ranking: size desc, then accesses asc, then write-ratio desc.
+
+    ``pinned_remote`` objects are excluded: they are demoted unconditionally
+    before the ranked walk (their authoritative copy lives in the pool by
+    construction), so they never compete for the budget-driven prefix.
+    """
     eligible = [
         o for o in objects
         if not o.is_small and not o.is_short_lived and not o.pinned_local
+        and not o.pinned_remote
     ]
     return sorted(
         eligible,
         key=lambda o: (-o.size_bytes, o.n_accesses, -o.write_ratio, o.name),
     )
+
+
+def expert_slab_objects(
+    cfg,
+    *,
+    n_moe_layers: int | None = None,
+) -> list[DataObject]:
+    """Per-expert object census for a MoE config (ISSUE 10).
+
+    One :class:`DataObject` per ``(moe_layer, expert)`` slab — the packed
+    ``(w_gate, w_up, w_down)`` weights — named to match the serving pager's
+    pool entries (``expert:L{l}:E{e}``). Each slab is ``pinned_remote``: the
+    pool holds the authoritative copy and only the pager's resident set
+    occupies HBM. Access stats encode the cold skew the §4.1 ranking keys
+    on: an expert is read iff routed, expected ``top_k / n_experts`` of the
+    per-token reads a dense FFN would take, and never written at serve time.
+    """
+    if not getattr(cfg, "is_moe", False):
+        return []
+    if n_moe_layers is None:
+        n_moe_layers = cfg.n_layers - cfg.first_k_dense
+    slab_elems = 3 * cfg.d_model * cfg.moe_d_ff
+    out: list[DataObject] = []
+    for layer in range(n_moe_layers):
+        for e in range(cfg.n_experts):
+            out.append(DataObject(
+                name=expert_slab_name(layer, e),
+                shape=(slab_elems,),
+                dtype=cfg.dtype,
+                kind=ObjectKind.EXPERT,
+                n_reads=1,
+                n_writes=0,
+                pinned_remote=True,
+            ))
+    return out
+
+
+def expert_slab_name(layer: int, expert: int) -> str:
+    """Canonical pool/catalog name of one paged expert slab."""
+    return f"expert:L{layer:02d}:E{expert:03d}"
 
 
 class PlacementPolicy:
@@ -231,6 +277,18 @@ class PlacementPolicy:
         node_of: dict[str, int] = {}
         node_load: dict[int, int] = {i: 0 for i in range(n_nodes)}
         local_bytes = peak
+        # pinned_remote objects (paged expert slabs) demote unconditionally:
+        # the pool is their authoritative home, independent of the budget.
+        # They still charge node_load (capacity planning sees them) but skip
+        # the per-node capacity gate — they have no local fallback.
+        for obj in catalog:
+            if not obj.pinned_remote:
+                continue
+            home = min(node_load, key=lambda i: (node_load[i], i))
+            tiers[obj.name] = Tier.REMOTE
+            node_of[obj.name] = home
+            node_load[home] += footprint(obj.size_bytes)
+            local_bytes -= obj.size_bytes
         for obj in demotion_order(catalog):
             if not self.all_large_remote and local_bytes <= local_budget_bytes:
                 break

@@ -1172,10 +1172,189 @@ def pool_nodes_needed(
     return need
 
 
+# ---------------------------------------------------------------------------
+# expert-residency sizing: hit-rate curves over router mass (ISSUE 10)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ExpertCurvePoint:
+    """One priced resident-set size on the expert hit-rate curve."""
+
+    resident: int
+    hit_rate: float
+    resident_bytes: int
+    predicted_degradation: float
+
+
+@dataclasses.dataclass
+class ExpertResidencyAdvice:
+    """:func:`advise_expert_residency` result: advised resident-set size.
+
+    ``hit_rate``/``predicted_degradation`` describe the advised point;
+    ``curve`` carries every candidate so callers can plot the knee. The
+    curve's hit-rate is non-decreasing in ``resident`` by construction
+    (top-``r`` router mass), mirroring :func:`advise_local_size`'s
+    monotone-budget contract.
+    """
+
+    advised_resident: int
+    hit_rate: float
+    resident_bytes: int
+    predicted_degradation: float
+    feasible: bool
+    degradation_target: float
+    curve: list[ExpertCurvePoint]
+
+    def summary(self) -> dict[str, Any]:
+        """Compact dict of the advice (resident count, hit rate, bytes)."""
+        return {
+            "advised_resident": self.advised_resident,
+            "hit_rate": round(self.hit_rate, 4),
+            "resident_bytes": self.resident_bytes,
+            "predicted_degradation": round(self.predicted_degradation, 4),
+            "feasible": self.feasible,
+        }
+
+
+def advise_expert_residency(
+    mass: np.ndarray,
+    *,
+    bytes_per_expert: int,
+    fetch_us_per_expert: float,
+    compute_us_per_step: float,
+    experts_per_step: float,
+    degradation_target: float = DEFAULT_DEGRADATION_TARGET,
+    hbm_budget_bytes: int | None = None,
+    min_resident: int = 1,
+) -> ExpertResidencyAdvice:
+    """Smallest per-layer resident set whose predicted degradation fits.
+
+    The serving analogue of :func:`advise_local_size` for paged expert
+    weights: ``mass`` is the measured per-expert router mass — shape
+    ``(E,)`` or ``(n_layers, E)``, e.g. the pager's decayed EMA — and the
+    stationary working-set model prices each candidate resident-set size
+    ``r``:
+
+    * ``hit_rate(r)`` = the router-mass fraction covered by the top-``r``
+      experts (averaged over layers) — the probability a routed expert is
+      already resident under mass-ranked retention;
+    * misses per step = ``experts_per_step × (1 − hit_rate(r))``, each
+      stalling a blocking ``fetch_us_per_expert`` (sync fallback; prefetch
+      hides predicted fetches, so this prices the *unpredicted* tail);
+    * ``degradation(r)`` = miss stall per step over ``compute_us_per_step``.
+
+    The advised ``r`` is the smallest candidate meeting the target whose
+    resident bytes also fit ``hbm_budget_bytes`` (when given). If no
+    candidate meets both, ``feasible`` is False and the advice falls back
+    to the least-degraded affordable candidate.
+    """
+    m = np.asarray(mass, dtype=np.float64)
+    if m.ndim == 1:
+        m = m[None, :]
+    if m.ndim != 2:
+        raise ValueError(f"mass must be (E,) or (n_layers, E), got {m.shape}")
+    n_layers, E = m.shape
+    totals = m.sum(axis=1, keepdims=True)
+    # uniform prior where a layer has no observed mass yet (cold start)
+    p = np.where(totals > 0, m / np.where(totals > 0, totals, 1.0), 1.0 / E)
+    ranked = np.sort(p, axis=1)[:, ::-1]          # per-layer mass, desc
+    coverage = np.cumsum(ranked, axis=1)           # (n_layers, E): hit_rate(r)
+
+    curve: list[ExpertCurvePoint] = []
+    for r in range(max(min_resident, 1), E + 1):
+        hr = float(np.mean(coverage[:, r - 1]))
+        stall = experts_per_step * (1.0 - hr) * fetch_us_per_expert
+        deg = stall / compute_us_per_step if compute_us_per_step else 0.0
+        curve.append(ExpertCurvePoint(
+            resident=r,
+            hit_rate=hr,
+            resident_bytes=r * bytes_per_expert * n_layers,
+            predicted_degradation=deg,
+        ))
+
+    affordable = [
+        pt for pt in curve
+        if hbm_budget_bytes is None or pt.resident_bytes <= hbm_budget_bytes
+    ] or curve[:1]
+    feasible_pts = [pt for pt in affordable
+                    if pt.predicted_degradation <= degradation_target + 1e-12]
+    if feasible_pts:
+        best = min(feasible_pts, key=lambda pt: pt.resident)
+        ok = True
+    else:
+        best = min(affordable, key=lambda pt: pt.predicted_degradation)
+        ok = False
+    return ExpertResidencyAdvice(
+        advised_resident=best.resident,
+        hit_rate=best.hit_rate,
+        resident_bytes=best.resident_bytes,
+        predicted_degradation=best.predicted_degradation,
+        feasible=ok,
+        degradation_target=degradation_target,
+        curve=curve,
+    )
+
+
+def decode_state_census(model_cfg, batch: int, max_len: int) -> ObjectCatalog:
+    """Analytic census of a config's decode-state objects (ISSUE 10).
+
+    Extends the tiered accounting beyond GQA KV pages to every persistent
+    decode-state family the repo ships — MLA's latent KV (the compressed
+    ``c``/``kr`` caches), Mamba SSD conv/state, the hybrid's shared
+    attention KV — plus the per-expert weight slabs of MoE configs. Names
+    mirror the serving engine's catalog convention (``cache['k']`` …) and
+    :func:`repro.core.placement.expert_slab_name`, and the cache rows are
+    asserted byte-identical to ``init_decode_cache`` in tests, so sizing
+    advice priced on this census prices the arrays the engine actually
+    holds.
+    """
+    from repro.core.placement import expert_slab_objects
+
+    cfg = model_cfg
+    nL = cfg.n_layers
+    catalog = ObjectCatalog()
+
+    def add(name: str, shape: tuple[int, ...], dtype) -> None:
+        catalog.add(DataObject(
+            name=f"cache['{name}']", shape=shape, dtype=dtype,
+            kind=ObjectKind.KV_CACHE, n_reads=1, n_writes=1,
+        ))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attention == "mla":
+            add("c", (nL, batch, max_len, cfg.kv_lora_rank), cfg.dtype)
+            add("kr", (nL, batch, max_len, cfg.qk_rope_head_dim), cfg.dtype)
+        else:
+            S_c = (min(max_len, cfg.sliding_window) if cfg.sliding_window
+                   else max_len)
+            shape = (nL, batch, S_c, cfg.n_kv_heads, cfg.head_dim)
+            add("k", shape, cfg.dtype)
+            add("v", shape, cfg.dtype)
+    elif cfg.family in ("ssm", "hybrid"):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        add("conv", (nL, batch, cfg.ssm_conv_width - 1, conv_ch), cfg.dtype)
+        add("state",
+            (nL, batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state),
+            np.float32)
+        if cfg.family == "hybrid":
+            n_inv = cfg.n_layers // cfg.hybrid_attn_every
+            shape = (n_inv, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            add("shared_k", shape, cfg.dtype)
+            add("shared_v", shape, cfg.dtype)
+    else:
+        raise ValueError(f"decode census for family {cfg.family!r} "
+                         "is not supported")
+
+    for obj in expert_slab_objects(cfg):
+        catalog.add(obj)
+    return catalog
+
+
 __all__ = [
     "CostModel",
     "CurvePoint",
     "DEFAULT_DEGRADATION_TARGET",
+    "ExpertCurvePoint",
+    "ExpertResidencyAdvice",
     "FleetFeasibility",
     "MODEL_TOLERANCE",
     "MarginalCost",
@@ -1186,9 +1365,11 @@ __all__ = [
     "SizingAdvice",
     "TenantAdvice",
     "WorkloadProfile",
+    "advise_expert_residency",
     "advise_local_size",
     "advise_tenants",
     "combined_feasibility",
+    "decode_state_census",
     "effective_node_capacity",
     "pool_nodes_needed",
     "simulate_profile",

@@ -42,20 +42,39 @@ def _expert_weight_names(cfg: ModelConfig):
     return ("expert", None, "ff"), ("expert", "ff", None)  # tensor-parallel
 
 
+def expert_tensors(p: Params) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single read point for the routed-expert weights (dense + EP paths).
+
+    ``p`` is either the plain param dict ``moe_init`` builds or the
+    assembled view an :class:`repro.serving.expert_paging.ExpertParamStore`
+    produces. In the paged case non-resident experts' rows are zeros: a
+    capacity slot that received no valid token carries an exact-zero input,
+    and 0-rows keep it exactly zero through silu/einsum — so the output is
+    bit-identical to untiered whenever every *routed* expert is resident
+    (the serving engine's fixpoint step loop enforces exactly that).
+    """
+    return p["w_gate"], p["w_up"], p["w_down"]
+
+
 def moe_ffn(
     p: Params,
     x: jax.Array,
     cfg: ModelConfig,
     *,
     groups: int | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Returns (output, load_balance_aux_loss). x: (B, S, d).
+    return_routing: bool = False,
+):
+    """Returns (output, load_balance_aux_loss[, (top_i, top_p)]). x: (B, S, d).
 
     When a mesh with a >1 'model' axis is active and experts divide it, the
     expert-parallel shard_map path is used: dispatch/combine run locally per
     expert shard (tokens are replicated across 'model') with a single combine
     psum per layer — instead of letting SPMD materialize cross-shard gathers
     and scatter-adds (EXPERIMENTS.md §Perf, deepseek cell).
+
+    With ``return_routing`` the per-token router decision is appended to the
+    result: ``top_i``/``top_p`` of shape (B, S, k) — the signal the serving
+    engine's expert pager feeds its per-expert router-mass EMA.
     """
     from repro.models.sharding import current_mesh
 
@@ -67,8 +86,10 @@ def moe_ffn(
         and mesh.shape["model"] > 1
         and cfg.n_experts % mesh.shape["model"] == 0
     ):
-        return _moe_ffn_ep(p, x, cfg, mesh, groups=groups)
-    return _moe_ffn_dense(p, x, cfg, groups=groups)
+        return _moe_ffn_ep(p, x, cfg, mesh, groups=groups,
+                           return_routing=return_routing)
+    return _moe_ffn_dense(p, x, cfg, groups=groups,
+                          return_routing=return_routing)
 
 
 def _moe_ffn_dense(
@@ -77,7 +98,8 @@ def _moe_ffn_dense(
     cfg: ModelConfig,
     *,
     groups: int | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    return_routing: bool = False,
+):
     B, S, d = x.shape
     E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
     G = groups if groups is not None else B
@@ -113,7 +135,10 @@ def _moe_ffn_dense(
     # position of each slot within its expert's contiguous run
     starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)  # (G,E)
     pos = jnp.arange(T * k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
-    valid = pos < cap
+    # the pos >= 0 guard mirrors the EP path (_dispatch_local): searchsorted
+    # keeps pos non-negative for well-formed expert ids, but the two paths
+    # must share one validity definition so they can never drift (ISSUE 10)
+    valid = (pos >= 0) & (pos < cap)
     dest = se * cap + jnp.where(valid, pos, 0)  # (G, T*k) in [0, E*cap)
 
     # gather tokens into (G, E, cap, d)
@@ -126,9 +151,10 @@ def _moe_ffn_dense(
 
     # expert computation
     wn1, wn2 = _expert_weight_names(cfg)
-    wg = constrain(p["w_gate"], *wn1)
-    wu = constrain(p["w_up"], *wn1)
-    wd = constrain(p["w_down"], *wn2)
+    wg_t, wu_t, wd_t = expert_tensors(p)
+    wg = constrain(wg_t, *wn1)
+    wu = constrain(wu_t, *wn1)
+    wd = constrain(wd_t, *wn2)
     h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xg, wg))
     h = h * jnp.einsum("gecd,edf->gecf", xg, wu)
     h = constrain(h, "batch", "expert", None, "expert_ff")
@@ -145,12 +171,38 @@ def _moe_ffn_dense(
 
     if cfg.n_shared_experts:
         out = out + mlp(p["shared"], x)
+    if return_routing:
+        routing = (top_i.reshape(B, S, k), top_p.reshape(B, S, k))
+        return out, aux, routing
     return out, aux
 
 
 # ---------------------------------------------------------------------------
 # expert-parallel dispatch (shard_map over the 'model' axis)
 # ---------------------------------------------------------------------------
+
+def _shard_map(body, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with a fallback to the pre-0.6 experimental API."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def _maybe_pvary(x, axis: str | None):
+    """``jax.lax.pvary`` where the varying-manual-axes machinery exists
+    (jax >= 0.6); identity elsewhere (older shard_map tracks replication
+    itself, and pvary's transpose-placement optimization does not apply)."""
+    pvary = getattr(jax.lax, "pvary", None)
+    if axis is None or pvary is None:
+        return x
+    typeof = getattr(jax, "typeof", None)
+    if typeof is not None and axis in typeof(x).vma:
+        return x
+    return pvary(x, axis)
+
 
 def _dispatch_local(xt, li, lw, E_loc, cap, w_gate, w_up, w_down, dtype,
                     axis: str | None = None):
@@ -166,8 +218,7 @@ def _dispatch_local(xt, li, lw, E_loc, cap, w_gate, w_up, w_down, dtype,
     the dx psum — placed at token granularity by construction, instead of
     XLA hoisting an all-reduce to the k-times-larger slot-level cotangent.
     """
-    if axis is not None and axis not in jax.typeof(xt).vma:
-        xt = jax.lax.pvary(xt, axis)
+    xt = _maybe_pvary(xt, axis)
     G, T, d = xt.shape
     k_slots = li.shape[1]
     flat_tok = jnp.broadcast_to(
@@ -211,7 +262,8 @@ def _moe_ffn_ep(
     mesh,
     *,
     groups: int | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    return_routing: bool = False,
+):
     from repro.models.sharding import resolve_spec
     from jax.sharding import PartitionSpec as P
 
@@ -219,6 +271,24 @@ def _moe_ffn_ep(
     E, k, cf = cfg.n_experts, cfg.top_k, cfg.capacity_factor
     n_shards = mesh.shape["model"]
     E_loc = E // n_shards
+
+    # thread ``groups`` exactly like the dense path: G dispatch groups of
+    # T = (B*S)/G tokens each set the per-expert capacity. The EP dispatch
+    # runs per data shard, so every group must fall entirely within one
+    # shard — contiguous batch sharding gives that iff n_data divides G.
+    G = groups if groups is not None else B
+    if G <= 0 or (B * S) % G:
+        raise ValueError(
+            f"moe groups={G} does not evenly partition {B}x{S} tokens"
+        )
+    n_data = mesh.shape.get("data", 1)
+    if G % n_data:
+        raise ValueError(
+            f"moe groups={G} must be divisible by the data-shard count "
+            f"{n_data} so each dispatch group stays within one shard"
+        )
+    T = (B * S) // G
+    G_loc = G // n_data
 
     # routing is computed replicated (tiny dot); aux loss comes from it
     gate_logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
@@ -230,7 +300,6 @@ def _moe_ffn_ep(
     ce = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0 / n_tok)
     aux = E * jnp.sum(me * ce) / k
 
-    T = S  # per-row groups; dispatch below flattens (B, S)
     cap = max(int(np.ceil(T * k / E * cf)), 1)
 
     x_spec = resolve_spec(x.shape, ("batch", None, None), mesh)
@@ -244,18 +313,23 @@ def _moe_ffn_ep(
         local = (topi_l >= lo) & (topi_l < lo + E_loc)
         li = jnp.where(local, topi_l - lo, E_loc).astype(jnp.int32)
         lw = jnp.where(local, topp_l, 0.0)
-        Bl = x_l.shape[0]
-        part = _dispatch_local(x_l, li.reshape(Bl, -1), lw.reshape(Bl, -1),
+        Bl, Sl, dl = x_l.shape
+        part = _dispatch_local(x_l.reshape(G_loc, T, dl),
+                               li.reshape(G_loc, T * k),
+                               lw.reshape(G_loc, T * k),
                                E_loc, cap, wg_l, wu_l, wd_l, x_l.dtype,
                                axis="model")
-        return jax.lax.psum(part, "model")
+        return jax.lax.psum(part.reshape(Bl, Sl, dl), "model")
 
-    out = jax.shard_map(
+    wg, wu, wd = expert_tensors(p)
+    out = _shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, r_spec, r_spec, w1_spec, w1_spec, w2_spec),
         out_specs=x_spec,
-    )(x, top_i, top_p, p["w_gate"], p["w_up"], p["w_down"])
+    )(x, top_i, top_p, wg, wu, wd)
 
     if cfg.n_shared_experts:
         out = out + mlp(p["shared"], x)
+    if return_routing:
+        return out, aux, (top_i, top_p)
     return out, aux

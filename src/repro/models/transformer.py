@@ -393,11 +393,20 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 def decode_step(
     params: Params, cache: dict, tokens: jax.Array, cfg: ModelConfig,
-    *, moe_groups: int | None = None,
-) -> tuple[jax.Array, dict]:
-    """One-token decode. tokens: (B, 1). Returns (logits[B,1,V], new cache)."""
+    *, moe_groups: int | None = None, return_routing: bool = False,
+):
+    """One-token decode. tokens: (B, 1). Returns (logits[B,1,V], new cache).
+
+    With ``return_routing`` (moe family only) a third element is appended:
+    ``{"top_i": (nL_moe, B, 1, k), "top_p": (nL_moe, B, 1, k)}`` — the
+    per-MoE-layer router decision, stacked in scan order over the MoE
+    layers. The serving engine's expert pager consumes it both to validate
+    that every routed expert was resident (the bit-identity fixpoint) and
+    to feed the router-mass EMA that predicts the next step's experts.
+    """
     pos = cache["pos"]
     x = L.embed(params["embed"], tokens, cfg)
+    routing = None
 
     if cfg.family in ("dense", "vlm", "moe"):
         if cfg.attention == "mla":
@@ -406,49 +415,69 @@ def decode_step(
                 h = L.rmsnorm(p["ln1"], xx)
                 o, c_l, kr_l = MLA.mla_decode_step(p["attn"], h, c_l, kr_l, pos, cfg)
                 xx = xx + o
+                rt = None
                 if "moe" in p:
-                    out, _ = MOE.moe_ffn(
-                        p["moe"], L.rmsnorm(p["ln2"], xx), cfg, groups=moe_groups
-                    )
+                    h2 = L.rmsnorm(p["ln2"], xx)
+                    if return_routing:
+                        out, _, rt = MOE.moe_ffn(
+                            p["moe"], h2, cfg, groups=moe_groups,
+                            return_routing=True,
+                        )
+                    else:
+                        out, _ = MOE.moe_ffn(
+                            p["moe"], h2, cfg, groups=moe_groups
+                        )
                     xx = xx + out
                 else:
                     xx = xx + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], xx))
-                return xx, (c_l, kr_l)
+                return xx, (c_l, kr_l, rt)
 
             if cfg.first_k_dense and "dense_layers" in params:
                 nd = cfg.first_k_dense
-                x, (c_d, kr_d) = jax.lax.scan(
+                x, (c_d, kr_d, _) = jax.lax.scan(
                     body, x, (params["dense_layers"], cache["c"][:nd], cache["kr"][:nd])
                 )
-                x, (c_m, kr_m) = jax.lax.scan(
+                x, (c_m, kr_m, rt_m) = jax.lax.scan(
                     body, x, (params["layers"], cache["c"][nd:], cache["kr"][nd:])
                 )
                 new_c = jnp.concatenate([c_d, c_m], 0)
                 new_kr = jnp.concatenate([kr_d, kr_m], 0)
             else:
-                x, (new_c, new_kr) = jax.lax.scan(
+                x, (new_c, new_kr, rt_m) = jax.lax.scan(
                     body, x, (params["layers"], cache["c"], cache["kr"])
                 )
             cache = {**cache, "c": new_c, "kr": new_kr, "pos": pos + 1}
+            if rt_m is not None:
+                routing = {"top_i": rt_m[0], "top_p": rt_m[1]}
         else:
             def body(xx, scanned):
                 p, k_l, v_l = scanned
                 h = L.rmsnorm(p["ln1"], xx)
                 o, k_l, v_l = L.gqa_decode_step(p["attn"], h, k_l, v_l, pos, cfg)
                 xx = xx + o
+                rt = None
                 if "moe" in p:
-                    out, _ = MOE.moe_ffn(
-                        p["moe"], L.rmsnorm(p["ln2"], xx), cfg, groups=moe_groups
-                    )
+                    h2 = L.rmsnorm(p["ln2"], xx)
+                    if return_routing:
+                        out, _, rt = MOE.moe_ffn(
+                            p["moe"], h2, cfg, groups=moe_groups,
+                            return_routing=True,
+                        )
+                    else:
+                        out, _ = MOE.moe_ffn(
+                            p["moe"], h2, cfg, groups=moe_groups
+                        )
                     xx = xx + out
                 else:
                     xx = xx + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], xx))
-                return xx, (k_l, v_l)
+                return xx, (k_l, v_l, rt)
 
-            x, (new_k, new_v) = jax.lax.scan(
+            x, (new_k, new_v, rt_m) = jax.lax.scan(
                 body, x, (params["layers"], cache["k"], cache["v"])
             )
             cache = {**cache, "k": new_k, "v": new_v, "pos": pos + 1}
+            if rt_m is not None:
+                routing = {"top_i": rt_m[0], "top_p": rt_m[1]}
 
     elif cfg.family == "ssm":
         def body(xx, scanned):
@@ -507,4 +536,6 @@ def decode_step(
 
     x = L.rmsnorm(params["ln_f"], x)
     logits = L.logits(params["embed"], x, cfg)
+    if return_routing:
+        return logits, cache, routing
     return logits, cache
